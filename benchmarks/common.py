@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: sequences, timing, CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import CmaxConfig  # noqa: E402
+from repro.data import events as ev_data  # noqa: E402
+
+
+def bench_sequences(n_windows: int = 16, events_per_window: int = 4096):
+    """The two paper-style sequences at CPU-friendly scale."""
+    import dataclasses
+    mk = lambda base: dataclasses.replace(
+        base, n_windows=n_windows, events_per_window=events_per_window,
+        omega_scale=7.0, window_dt=0.03, jerk_prob=0.25)
+    return {"poster": mk(ev_data.POSTER), "boxes": mk(ev_data.BOXES)}
+
+
+def time_call(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time in microseconds (post-compile)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def rmse(est: np.ndarray, ref: np.ndarray) -> float:
+    e = np.linalg.norm(np.asarray(est) - np.asarray(ref), axis=-1)
+    return float(np.sqrt((e ** 2).mean()))

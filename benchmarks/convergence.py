@@ -1,0 +1,58 @@
+"""Paper Fig. 2: empirical stage-wise convergence of coarse-to-fine CMAX —
+normalized variance rises rapidly then saturates within each stage; the
+saturation point varies per window (the motivation for runtime adaptivity).
+
+Reproduced from the pipeline's recorded per-iteration variance histories.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import bench_sequences, emit
+from repro.core import estimate_sequence, fixed_schedule_config
+from repro.data import events as ev_data
+
+STAGE_NAMES = ("low", "mid", "full")
+
+
+def run() -> dict:
+    spec = bench_sequences(n_windows=10, events_per_window=8192)["poster"]
+    # fixed schedule with a generous budget so every window records the
+    # full saturation curve (the adaptive policy would cut it short)
+    cfg = fixed_schedule_config(spec.camera, iters=(12, 12, 12))
+    wins, om_true, _ = ev_data.make_sequence(spec)
+    _, res = estimate_sequence(wins, jnp.asarray(om_true[0]), cfg)
+
+    out = {}
+    for si, name in enumerate(STAGE_NAMES):
+        tr = res.stages[si]
+        hist = np.asarray(tr.v_history)            # (K, max_iters)
+        v0 = np.asarray(tr.v_entry)[:, None]
+        vf = np.nanmax(hist, axis=1, keepdims=True)
+        norm = (hist - v0) / np.maximum(vf - v0, 1e-9)   # 0 -> 1 rise
+        mean = np.nanmean(norm, axis=0)
+        # iteration where the mean curve crosses 90% of its gain
+        thresh = 0.9
+        cross = int(np.argmax(mean >= thresh)) + 1 if (mean >= thresh).any() \
+            else len(mean)
+        # per-window variation of that saturation point
+        pw = []
+        for k in range(norm.shape[0]):
+            row = norm[k]
+            ok = ~np.isnan(row)
+            if ok.any() and (row[ok] >= thresh).any():
+                pw.append(int(np.argmax(row >= thresh)) + 1)
+        spread = (min(pw), max(pw)) if pw else (0, 0)
+        emit(f"fig2_{name}_mean_curve", 0.0,
+             ";".join(f"{v:.2f}" for v in mean[:12]))
+        emit(f"fig2_{name}_saturation", 0.0,
+             f"mean_90pct_at_iter={cross};per_window_range="
+             f"{spread[0]}-{spread[1]}")
+        out[name] = dict(mean_curve=mean.tolist(), saturation=cross,
+                         spread=spread)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + kernel bench.
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+
+    PYTHONPATH=src:. python -m benchmarks.run [--only accuracy]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "accuracy", "convergence", "locality",
+                             "energy", "kernels"])
+    args = ap.parse_args()
+
+    from . import accuracy, convergence, energy_latency, kernels, locality
+    suites = {
+        "accuracy": accuracy.run,          # paper Table 1 + Fig. 3
+        "convergence": convergence.run,    # paper Fig. 2
+        "locality": locality.run,          # paper Tables 2-3
+        "energy": energy_latency.run,      # paper Table 6 + §5.2
+        "kernels": kernels.run,            # Pallas kernels + tile hillclimb
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"suite_{name}_wall_s,{(time.time() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""End-to-end driver: pretrain a ~100M-param llama-style model for a few
+hundred steps on the synthetic token pipeline, with checkpointing and
+fault-tolerant resume. CPU-friendly scale.
+
+    PYTHONPATH=src python examples/lm_pretrain.py [--steps 300]
+"""
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.data.lm import LMDataConfig, batches
+from repro.launch.mesh import make_smoke_mesh
+from repro.models.config import ModelConfig
+from repro.train.loop import TrainConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--ckpt", default="checkpoints/lm_pretrain")
+args = ap.parse_args()
+
+# ~100M params: 12L, d=512, llama-style
+cfg = ModelConfig(name="demo-100m", family="dense", n_layers=12,
+                  d_model=512, n_heads=8, n_kv_heads=4, d_ff=1536,
+                  vocab_size=32768, block_pattern=("attn",),
+                  ffn_kind="swiglu", dtype="float32")
+print(f"params ~= {cfg.param_count() / 1e6:.1f}M")
+
+mesh = make_smoke_mesh(model=1)   # 1 CPU device locally
+data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                    global_batch=8, seed=0)
+tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=50,
+                 log_every=10, lr=6e-4)
+
+hist = train(cfg, tc, mesh, batches(data), max_len=data.seq_len)
+first = sum(hist["loss"][:10]) / 10
+last = sum(hist["loss"][-10:]) / 10
+print(f"\nloss {first:.3f} -> {last:.3f} over {len(hist['loss'])} steps "
+      f"({'improved' if last < first else 'NOT improved'})")

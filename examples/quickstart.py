@@ -1,0 +1,33 @@
+"""Quickstart: estimate camera rotation from a synthetic event stream with
+runtime-adaptive CMAX (the paper's pipeline), in ~20 lines of user code.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CmaxConfig, estimate_sequence
+from repro.data import events as ev
+
+# 1) make a short synthetic sequence with ground-truth rotation
+spec = ev.SequenceSpec(name="quickstart", n_windows=8,
+                       events_per_window=4096, omega_scale=6.0,
+                       window_dt=0.03, seed=7)
+windows, omega_true, omega_imu = ev.make_sequence(spec)
+
+# 2) run the runtime-adaptive coarse-to-fine pipeline with warm starts
+cfg = CmaxConfig(camera=spec.camera)
+omegas, traces = estimate_sequence(windows, omega_true[0], cfg)
+
+# 3) report
+err = np.linalg.norm(np.asarray(omegas - omega_true), axis=1)
+print("window |  true |omega|  est |omega|   err (rad/s)  iters/stage")
+for k in range(spec.n_windows):
+    iters = [int(np.asarray(t.iters[k])) for t in traces.stages]
+    print(f"  {k:2d}   |   {float(jnp.linalg.norm(omega_true[k])):6.3f}"
+          f"     |   {float(jnp.linalg.norm(omegas[k])):6.3f}   "
+          f"| {err[k]:8.4f}    | {iters}")
+print(f"\nRMSE vs ground truth: {np.sqrt((err ** 2).mean()):.4f} rad/s")

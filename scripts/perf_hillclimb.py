@@ -1,0 +1,82 @@
+"""§Perf hillclimb driver: re-lower the three chosen cells with one
+optimization knob at a time and record before/after evidence.
+
+    PYTHONPATH=src python scripts/perf_hillclimb.py [--only H1]
+Writes results/perf/<cell><variant>.json; prints a before/after table.
+"""
+import sys
+sys.path.insert(0, "src")
+
+import os
+os.environ.setdefault("DRYRUN_DEVICES", "512")
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell  # sets XLA_FLAGS on import
+
+OUT = Path("results/perf")
+OUT.mkdir(parents=True, exist_ok=True)
+
+# (cell-id, arch, shape, variants) — each variant: (suffix, overrides)
+PLAN = {
+    # H1: worst roofline/temp offender — 32k prefill materializes SqxSk
+    # attention scores; chunked attention removes them
+    "H1": ("deepseek-67b", "prefill_32k", [
+        ("", None),                                   # baseline (cached)
+        ("__chunk2048", {"attn_q_chunk": 2048}),
+        ("__chunk1024", {"attn_q_chunk": 1024}),
+        ("__chunk512", {"attn_q_chunk": 512}),
+    ]),
+    # H2: most collective-bound fraction — TP of a 60M model over 16 chips
+    # is waste; fold the model axis into pure data parallelism
+    "H2": ("whisper-tiny", "train_4k", [
+        ("", None),
+        ("__dponly", {"policy": "dp_only"}),
+    ]),
+    # H3: the 1T-MoE flagship — trade remat re-forward compute for memory,
+    # and trim EP all-to-all via capacity factor
+    "H3": ("kimi-k2-1t-a32b", "train_4k", [
+        ("", None),
+        ("__dots", {"remat_policy": "dots"}),
+        ("__cap1.0", {"capacity_factor": 1.0}),
+        ("__chunk1024", {"attn_q_chunk": 1024}),
+        ("__mb4", {"microbatch": 4}),
+        ("__mb8", {"microbatch": 8}),
+        ("__mb8cap1.0", {"microbatch": 8, "capacity_factor": 1.0}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+
+    for hid, (arch, shape, variants) in PLAN.items():
+        if args.only and hid != args.only:
+            continue
+        print(f"\n===== {hid}: {arch} x {shape} =====")
+        rows = []
+        for suffix, ov in variants:
+            rec = run_cell(arch, shape, args.mesh, OUT,
+                           overrides=ov, tag_suffix=suffix)
+            if rec.get("status") != "ok":
+                continue
+            rows.append((suffix or "baseline",
+                         rec["cost"].get("flops", 0),
+                         rec["cost"].get("bytes accessed", 0),
+                         rec.get("collectives", {}).get("total", 0),
+                         (rec["memory"]["argument_size_in_bytes"]
+                          + rec["memory"]["temp_size_in_bytes"]) / 2**30))
+        print(f"{'variant':14s} {'flops/dev':>12s} {'bytes/dev':>12s} "
+              f"{'coll B/dev':>12s} {'args+temp GiB':>14s}")
+        for name, fl, by, co, gib in rows:
+            print(f"{name:14s} {fl:12.3e} {by:12.3e} {co:12.3e} "
+                  f"{gib:14.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro: CMAX-CAMEL (ISLPED 2026) reproduction + multi-pod JAX framework.
+
+Subpackages:
+  core      — the paper's contribution (runtime-adaptive CMAX)
+  kernels   — Pallas TPU kernels (+ interpret-mode validation)
+  models    — LM substrate for the 10 assigned architectures
+  configs   — architecture registry
+  sharding  — partition-spec rules
+  train     — optimizers, checkpointing, fault tolerance, loop
+  launch    — mesh / dryrun / train / serve entry points
+  roofline  — three-term roofline analysis
+  data      — synthetic event + token pipelines
+"""
+__version__ = "1.0.0"

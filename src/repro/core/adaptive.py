@@ -1,0 +1,62 @@
+"""Runtime-adaptive stage-transition control (paper Algorithm 1).
+
+The controller logic is deliberately tiny and *separate from the datapath*
+(paper §2: "this adaptive execution problem should be treated separately
+from the repeated warp-and-accumulate datapath itself"). It is exposed in
+two forms:
+
+  * `gain` / `should_stay` — the pure decision functions used inside the
+    per-stage `lax.while_loop` of pipeline.py.
+  * `GainThresholdController` — a generic, reusable runtime-adaptive
+    iteration controller (gain-thresholded saturation detection with a hard
+    cap), usable for ANY iterative JAX computation. The LM side of this
+    framework does not consume it (the CMAX technique is inapplicable to LM
+    training — DESIGN.md §Arch-applicability), but it is the paper's
+    transferable control idea, tested standalone in tests/test_adaptive.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gain(v: jax.Array, v_prev: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Normalized variance gain g = (V - V_prev) / |V_prev|   (Eq. 7)."""
+    return (v - v_prev) / jnp.maximum(jnp.abs(v_prev), eps)
+
+
+def should_stay(v: jax.Array, v_prev: jax.Array, tau: float) -> jax.Array:
+    """Alg. 1 line 7: keep the current stage iff g >= tau_s."""
+    return gain(v, v_prev) >= tau
+
+
+@dataclasses.dataclass(frozen=True)
+class GainThresholdController:
+    """Generic runtime-adaptive iteration loop.
+
+    Repeats `step` while the normalized objective gain stays >= tau, up to
+    `max_iters`. `step(state) -> (state, value)` must be jit-compatible.
+    Returns (final_state, final_value, iters_executed).
+    """
+
+    tau: float
+    max_iters: int
+
+    def run(self, step: Callable, state, v0) -> Tuple[object, jax.Array,
+                                                      jax.Array]:
+        def cond(carry):
+            _, _, it, done = carry
+            return (~done) & (it < self.max_iters)
+
+        def body(carry):
+            st, v_prev, it, _ = carry
+            st, v = step(st)
+            done = ~should_stay(v, v_prev, self.tau)
+            return (st, v, it + 1, done)
+
+        st, v, iters, _ = jax.lax.while_loop(
+            cond, body, (state, v0, jnp.int32(0), jnp.bool_(False)))
+        return st, v, iters

@@ -1,0 +1,59 @@
+"""CG-PR (Polak-Ribiere conjugate-gradient) ascent — the optimizer the
+prototype's Rocket core runs on the engine's (variance, gradient) outputs
+(paper §5.1, ref [42]).
+
+Nonlinear CG with the PR+ beta (clipped at zero, which is the standard
+restart-safe variant) and a normalized-direction fixed step per stage:
+
+    beta  = max(0, g_new . (g_new - g_old) / (g_old . g_old))
+    d_new = g_new + beta * d_old
+    w    += alpha * d_new / (|d_new| + eps)
+
+State is a flat NamedTuple so it can live in a lax.while_loop carry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CgprState(NamedTuple):
+    g_prev: jax.Array   # (3,) previous gradient
+    d_prev: jax.Array   # (3,) previous direction
+    first: jax.Array    # () bool: no history yet -> steepest ascent
+
+
+def init_state(dim: int = 3, dtype=jnp.float32) -> CgprState:
+    z = jnp.zeros((dim,), dtype)
+    return CgprState(g_prev=z, d_prev=z, first=jnp.bool_(True))
+
+
+def direction(g: jax.Array, st: CgprState) -> tuple[jax.Array, CgprState]:
+    """PR+ conjugate direction for gradient `g` (ascent)."""
+    denom = jnp.maximum(jnp.dot(st.g_prev, st.g_prev), 1e-24)
+    beta = jnp.dot(g, g - st.g_prev) / denom
+    beta = jnp.maximum(beta, 0.0)
+    beta = jnp.where(st.first, 0.0, beta)
+    d = g + beta * st.d_prev
+    # safeguard: if d is not an ascent direction, restart with g
+    d = jnp.where(jnp.dot(d, g) > 0.0, d, g)
+    return d, CgprState(g_prev=g, d_prev=d, first=jnp.bool_(False))
+
+
+def step(omega: jax.Array, g: jax.Array, st: CgprState,
+         alpha: float) -> tuple[jax.Array, CgprState]:
+    """One CG-PR update of the motion hypothesis."""
+    d, st = direction(g, st)
+    nrm = jnp.linalg.norm(d)
+    omega = omega + alpha * d / (nrm + 1e-12)
+    return omega, st
+
+
+def gradient_ascent_step(omega: jax.Array, g: jax.Array, st: CgprState,
+                         alpha: float) -> tuple[jax.Array, CgprState]:
+    """Plain normalized gradient ascent (use_cgpr=False fallback)."""
+    nrm = jnp.linalg.norm(g)
+    return omega + alpha * g / (nrm + 1e-12), st._replace(
+        g_prev=g, first=jnp.bool_(False))

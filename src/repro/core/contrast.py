@@ -1,0 +1,111 @@
+"""Gaussian smoothing + contrast objective and gradient (paper Eq. 3-5, 11-12).
+
+Two mathematically identical realizations, both kept on purpose:
+
+  * `objective_direct`  — Eq. 11: blur the channel stack, then compute
+    Var(I_sigma) and dC/dw_j = 2/P * sum((I_sigma - mean) * D_sigma_j)
+    over materialized blurred images. This is the textbook formulation.
+
+  * `objective_streaming` — Eq. 12: maintain only the running sums
+    S1 = sum(I), S2 = sum(I^2), G_j = sum(I*D_j), T_j = sum(D_j) while the
+    blurred pixels stream out of the filter, never materializing any
+    blurred image. This is the paper's on-the-fly-statistics realization;
+    in JAX the fused Pallas kernel (kernels/blur_stats.py) implements it
+    with VMEM row-blocks, and this function is its pure-jnp oracle.
+
+tests/test_contrast.py pins `objective_direct == objective_streaming` and
+both against jax.grad of Var(blur(IWE(omega))).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gaussian_taps(num_taps: int, sigma: float, dtype=jnp.float32) -> jax.Array:
+    """Odd-length normalized Gaussian FIR taps (3/5/9-tap per stage)."""
+    assert num_taps % 2 == 1, "FIR must be odd-length"
+    half = num_taps // 2
+    xs = jnp.arange(-half, half + 1, dtype=dtype)
+    g = jnp.exp(-0.5 * (xs / sigma) ** 2)
+    return g / jnp.sum(g)
+
+
+def blur_separable(img: jax.Array, taps: jax.Array) -> jax.Array:
+    """Separable 2D Gaussian on a (..., H, W) stack: horizontal 1-D FIR
+    followed by a vertical pass — the same decomposition the hardware uses
+    (horizontal FIR + vertical line-buffer stage). Zero ('same') padding."""
+    k = taps.shape[0]
+    half = k // 2
+
+    def conv1d_lastaxis(x):
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(half, half)])
+        # sum of shifted-and-scaled copies: cheap + fully fusible for k<=9
+        out = jnp.zeros_like(x)
+        for i in range(k):
+            out = out + taps[i] * jax.lax.dynamic_slice_in_dim(
+                xp, i, x.shape[-1], axis=x.ndim - 1)
+        return out
+
+    h = conv1d_lastaxis(img)                         # horizontal
+    v = conv1d_lastaxis(jnp.swapaxes(h, -1, -2))     # vertical
+    return jnp.swapaxes(v, -1, -2)
+
+
+def objective_direct(channels: jax.Array, taps: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 11 on a (4, H, W) channel stack -> (variance, grad (3,)).
+
+    grad_j = 2/P * sum_x (I_sigma(x) - mean) * D_sigma_j(x).
+    """
+    blurred = blur_separable(channels, taps)
+    I = blurred[0]
+    D = blurred[1:4]
+    P = I.size
+    mean = jnp.mean(I)
+    var = jnp.mean((I - mean) ** 2)
+    grad = (2.0 / P) * jnp.sum((I - mean)[None] * D, axis=(1, 2))
+    return var, grad
+
+
+def streaming_stats(channels: jax.Array, taps: jax.Array) -> jax.Array:
+    """The eight running sums of Eq. 12 as a vector:
+    [S1, S2, G_x, G_y, G_z, T_x, T_y, T_z]."""
+    blurred = blur_separable(channels, taps)
+    I = blurred[0]
+    D = blurred[1:4]
+    S1 = jnp.sum(I)
+    S2 = jnp.sum(I * I)
+    G = jnp.sum(I[None] * D, axis=(1, 2))
+    T = jnp.sum(D, axis=(1, 2))
+    return jnp.concatenate([jnp.stack([S1, S2]), G, T])
+
+
+def stats_to_objective(stats: jax.Array, num_pixels: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 12: Var = S2/P - (S1/P)^2;  dC/dw_j = 2/P (G_j - S1*T_j/P)."""
+    P = float(num_pixels)
+    S1, S2 = stats[0], stats[1]
+    G = stats[2:5]
+    T = stats[5:8]
+    var = S2 / P - (S1 / P) ** 2
+    grad = (2.0 / P) * (G - S1 * T / P)
+    return var, grad
+
+
+def objective_streaming(channels: jax.Array, taps: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 12 path: running sums only (oracle for the Pallas kernel)."""
+    stats = streaming_stats(channels, taps)
+    return stats_to_objective(stats, channels.shape[-1] * channels.shape[-2])
+
+
+@functools.partial(jax.jit, static_argnames=("num_taps",))
+def variance_of(img: jax.Array, num_taps: int, sigma: float) -> jax.Array:
+    """Convenience: Var(G_sigma * img) for a bare (H, W) image."""
+    taps = gaussian_taps(num_taps, sigma, img.dtype)
+    b = blur_separable(img, taps)
+    return jnp.var(b)

@@ -1,0 +1,114 @@
+"""Shared pipelined event warp front-end (paper Algorithm 2).
+
+Computes, for every event:
+  * the stage-scaled warped coordinate (x', y') under rotation hypothesis w
+  * its integer/fractional decomposition (x0, y0), (ax, ay) for bilinear
+    voting
+  * the Jacobian rows (r_x, r_y) of the flow displacement wrt w — the paper's
+    convention is  r = s*dt * d(flow)/dw,  so  d(x')/dw = -r_x  and
+    d(y')/dw = -r_y  (the warp subtracts the flow)
+  * the stage-local pixel-group index p_act (= y0 * W_s + x0) with an
+    in-range validity flag.
+
+This is the single warp front-end the paper shares between the sorting pass
+and the main accumulation datapath; we do the same (sorting.py and iwe.py
+both call `warp_events`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import Camera, EventWindow
+
+
+class WarpOut(NamedTuple):
+    """Per-event outputs of Algorithm 2 (all shapes (N,) or (N,3))."""
+
+    xw: jax.Array       # warped x' (stage-scaled, float)
+    yw: jax.Array       # warped y'
+    x0: jax.Array       # floor(x') int32
+    y0: jax.Array       # floor(y') int32
+    ax: jax.Array       # subpixel fraction in x
+    ay: jax.Array       # subpixel fraction in y
+    rx: jax.Array       # (N,3) Jacobian row: d(x')/dw = -rx
+    ry: jax.Array       # (N,3) Jacobian row: d(y')/dw = -ry
+    p_act: jax.Array    # stage-local pixel-group id, -1 if out of range
+    in_range: jax.Array  # bool: all four bilinear taps land on the grid
+
+
+def rotational_flow(xn: jax.Array, yn: jax.Array, omega: jax.Array,
+                    fx: float, fy: float):
+    """Image-plane flow (u, v) of a purely rotating camera at normalized
+    coords (xn, yn) — the linearized rotation field of Alg. 2 lines 4-6."""
+    B = 1.0 + xn * xn
+    D = 1.0 + yn * yn
+    XY = xn * yn
+    wx, wy, wz = omega[..., 0], omega[..., 1], omega[..., 2]
+    u = fx * (XY * wx - B * wy + yn * wz)
+    v = fy * (D * wx - XY * wy - xn * wz)
+    return u, v
+
+
+def warp_events(ev: EventWindow, omega: jax.Array, cam: Camera,
+                scale: float, t_ref=None) -> WarpOut:
+    """Algorithm 2, vectorized over the event window.
+
+    Args:
+      ev: event window (padding handled via ev.valid -> in_range False).
+      omega: (3,) rotation-rate hypothesis [wx, wy, wz] (rad/s).
+      cam: camera intrinsics (native resolution).
+      scale: stage scale s; the warped coordinate is s * (x - dt*u).
+      t_ref: reference time; defaults to window start.
+    Returns: WarpOut.
+    """
+    if t_ref is None:
+        t_ref = ev.t_ref
+    Hs, Ws = cam.grid(scale)
+
+    xn = (ev.x - cam.cx) / cam.fx
+    yn = (ev.y - cam.cy) / cam.fy
+    dt = ev.t - t_ref
+
+    B = 1.0 + xn * xn
+    D = 1.0 + yn * yn
+    XY = xn * yn
+
+    wx, wy, wz = omega[0], omega[1], omega[2]
+    u = cam.fx * (XY * wx - B * wy + yn * wz)
+    v = cam.fy * (D * wx - XY * wy - xn * wz)
+
+    xw = scale * (ev.x - dt * u)
+    yw = scale * (ev.y - dt * v)
+
+    sdt = scale * dt
+    # r_x = s*dt*[fx*XY, -fx*B, fx*yn]; r_y = s*dt*[fy*D, -fy*XY, -fy*xn]
+    rx = jnp.stack([sdt * cam.fx * XY, -sdt * cam.fx * B, sdt * cam.fx * yn],
+                   axis=-1)
+    ry = jnp.stack([sdt * cam.fy * D, -sdt * cam.fy * XY, -sdt * cam.fy * xn],
+                   axis=-1)
+
+    x0 = jnp.floor(xw).astype(jnp.int32)
+    y0 = jnp.floor(yw).astype(jnp.int32)
+    ax = xw - x0
+    ay = yw - y0
+
+    # All 4 bilinear taps must be on-grid: x0 in [0, Ws-2], y0 in [0, Hs-2].
+    in_range = ((x0 >= 0) & (x0 <= Ws - 2) & (y0 >= 0) & (y0 <= Hs - 2)
+                & ev.valid)
+    p_act = jnp.where(in_range, y0 * Ws + x0, -1)
+
+    return WarpOut(xw=xw, yw=yw, x0=x0, y0=y0, ax=ax, ay=ay, rx=rx, ry=ry,
+                   p_act=p_act, in_range=in_range)
+
+
+def warp_points(x: jax.Array, y: jax.Array, dt: jax.Array, omega: jax.Array,
+                cam: Camera, scale: float = 1.0):
+    """Warp bare (x, y) points by dt under omega — used by the event
+    simulator and by tests (no Jacobians, no grid decomposition)."""
+    xn = (x - cam.cx) / cam.fx
+    yn = (y - cam.cy) / cam.fy
+    u, v = rotational_flow(xn, yn, omega, cam.fx, cam.fy)
+    return scale * (x - dt * u), scale * (y - dt * v)

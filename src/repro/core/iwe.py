@@ -1,0 +1,121 @@
+"""IWE + derivative-image accumulation with bilinear voting (paper Eq. 2/6).
+
+Every event contributes to the 4 neighbors of its warped coordinate with
+bilinear weights; alongside the IWE we accumulate the three derivative
+images dIWE_j = dI/dw_j (j in {x,y,z}) with per-tap analytic deltas — the
+same 4-channel x 4-tap = 16-lane structure the hardware uses.
+
+Sign conventions (see geometry.py): d(x')/dw = -r_x, d(y')/dw = -r_y, so
+  d w00/dw = +(1-ay) r_x + (1-ax) r_y        (w00 = (1-ax)(1-ay))
+  d w10/dw = -(1-ay) r_x + ax     r_y        (w10 = ax(1-ay))
+  d w01/dw = +ay     r_x - (1-ax) r_y        (w01 = (1-ax)ay)
+  d w11/dw = -ay     r_x - ax     r_y        (w11 = ax*ay)
+These sum to zero — bilinear voting conserves mass, so does its gradient.
+The correctness of this algebra is pinned by tests/test_iwe.py, which
+checks the accumulated dIWE against jax.grad of the scatter itself.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import WarpOut, warp_events
+from .types import Camera, EventWindow
+
+# Channel order everywhere in the codebase:
+CH_IWE, CH_DX, CH_DY, CH_DZ = 0, 1, 2, 3
+NUM_CHANNELS = 4
+NUM_TAPS = 4
+# Tap order: (dy, dx) = (0,0), (0,1), (1,0), (1,1)
+TAP_OFFSETS = ((0, 0), (0, 1), (1, 0), (1, 1))
+
+
+def tap_weights(ax: jax.Array, ay: jax.Array) -> jax.Array:
+    """(N, 4) bilinear weights in TAP_OFFSETS order."""
+    return jnp.stack([
+        (1 - ax) * (1 - ay),
+        ax * (1 - ay),
+        (1 - ax) * ay,
+        ax * ay,
+    ], axis=-1)
+
+
+def tap_weight_grads(ax: jax.Array, ay: jax.Array, rx: jax.Array,
+                     ry: jax.Array) -> jax.Array:
+    """(N, 4, 3) d(weight_tap)/dw using d(x')/dw = -rx, d(y')/dw = -ry."""
+    one = jnp.ones_like(ax)
+    # coefficient of rx (= -d/dax * dax/dw sign folded) per tap:
+    cx = jnp.stack([(1 - ay), -(1 - ay), ay, -ay], axis=-1)       # (N,4)
+    cy = jnp.stack([(1 - ax), ax, -(1 - ax), -ax], axis=-1)       # (N,4)
+    del one
+    return cx[..., None] * rx[:, None, :] + cy[..., None] * ry[:, None, :]
+
+
+def event_deltas(w: WarpOut, p: jax.Array,
+                 weights: Optional[jax.Array] = None) -> jax.Array:
+    """Per-event, per-tap, per-channel contribution deltas.
+
+    Returns (N, 4 taps, 4 channels): [IWE, dIWE_x, dIWE_y, dIWE_z].
+    `weights` is an optional per-event retention weight (subsampling mask /
+    compensation factor); invalid (out-of-range) events get zero delta.
+    """
+    wts = tap_weights(w.ax, w.ay)                       # (N,4)
+    gws = tap_weight_grads(w.ax, w.ay, w.rx, w.ry)      # (N,4,3)
+    pe = p.astype(wts.dtype)
+    if weights is not None:
+        pe = pe * weights.astype(wts.dtype)
+    pe = jnp.where(w.in_range, pe, 0.0)
+    iwe_d = pe[:, None] * wts                           # (N,4)
+    diwe_d = pe[:, None, None] * gws                    # (N,4,3)
+    return jnp.concatenate([iwe_d[..., None], diwe_d], axis=-1)  # (N,4,4)
+
+
+def accumulate(w: WarpOut, p: jax.Array, grid: Tuple[int, int],
+               weights: Optional[jax.Array] = None) -> jax.Array:
+    """Scatter-add all 16 lanes into a (4, H_s, W_s) channel stack.
+
+    This is the pure-XLA reference datapath (and the oracle for the Pallas
+    kernel). Out-of-range events were already zeroed in `event_deltas`; we
+    additionally clamp indices so the scatter itself is always in-bounds.
+    """
+    Hs, Ws = grid
+    deltas = event_deltas(w, p, weights)                # (N,4,4)
+    img = jnp.zeros((NUM_CHANNELS, Hs, Ws), dtype=deltas.dtype)
+    for ti, (dy, dx) in enumerate(TAP_OFFSETS):
+        yy = jnp.clip(w.y0 + dy, 0, Hs - 1)
+        xx = jnp.clip(w.x0 + dx, 0, Ws - 1)
+        # (4, N) per-channel updates for this tap
+        upd = deltas[:, ti, :].T
+        img = img.at[:, yy, xx].add(upd)
+    return img
+
+
+def build_iwe(ev: EventWindow, omega: jax.Array, cam: Camera, scale: float,
+              weights: Optional[jax.Array] = None,
+              t_ref=None) -> jax.Array:
+    """Warp + accumulate: the full warp-and-accumulate dataflow for one
+    hypothesis. Returns (4, H_s, W_s)."""
+    w = warp_events(ev, omega, cam, scale, t_ref=t_ref)
+    return accumulate(w, ev.p, cam.grid(scale), weights=weights)
+
+
+def build_iwe_only(ev: EventWindow, omega: jax.Array, cam: Camera,
+                   scale: float, weights: Optional[jax.Array] = None,
+                   t_ref=None) -> jax.Array:
+    """IWE channel only (no derivative images) — used by autodiff-based
+    references and tests: jax.grad through this must equal the explicit
+    dIWE path."""
+    w = warp_events(ev, omega, cam, scale, t_ref=t_ref)
+    Hs, Ws = cam.grid(scale)
+    wts = tap_weights(w.ax, w.ay)
+    pe = p_eff = jnp.where(w.in_range, ev.p.astype(wts.dtype), 0.0)
+    if weights is not None:
+        pe = p_eff * weights.astype(wts.dtype)
+    img = jnp.zeros((Hs, Ws), dtype=wts.dtype)
+    for ti, (dy, dx) in enumerate(TAP_OFFSETS):
+        yy = jnp.clip(w.y0 + dy, 0, Hs - 1)
+        xx = jnp.clip(w.x0 + dx, 0, Ws - 1)
+        img = img.at[yy, xx].add(pe * wts[:, ti])
+    return img

@@ -1,0 +1,192 @@
+"""Per-window CMAX estimation pipeline: warp -> sort -> iterate -> promote.
+
+This is the software twin of the CMAX-CAMEL engine + controller:
+
+  for each stage s in {1/4, 1/2, 1}:                     (coarse-to-fine)
+      sort_events(...)            # once per stage entry (Alg. 3)
+      entry pass: (V_prev, grad)  # Alg. 1 line 2
+      while_loop:                 # runtime-adaptive residence (Alg. 1)
+          omega <- CG-PR(omega, grad)          # Update(omega, s)
+          engine pass: IWE+dIWE -> blur -> (V, grad)     # one pass/iter
+          g = (V - V_prev)/|V_prev|
+          adaptive:  stay iff g >= tau_s  (else promote / terminate)
+          fixed:     stay iff iter < fixed_iters[s]
+
+Static shapes: each stage has its own (H_s, W_s) grid, so stages are chained
+at the Python level (3 static stages) while the *residence within* a stage
+is a data-dependent `lax.while_loop` — exactly the paper's split between
+predetermined stage structure and runtime-adaptive residence.
+
+`estimate_window` is jit-compatible (config static) and vmap-able over
+windows; `estimate_sequence` scans a full sequence with warm starts.
+
+The returned trace carries everything the energy/latency model (energy.py)
+needs: per-stage engine-pass counts and retained-event counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import cgpr
+from .adaptive import should_stay
+from .contrast import gaussian_taps, stats_to_objective, streaming_stats
+from .iwe import build_iwe
+from .sorting import sort_events
+from .types import Camera, CmaxConfig, EventWindow, StageConfig
+
+
+class StageTrace(NamedTuple):
+    iters: jax.Array        # () int32 — update iterations executed
+    passes: jax.Array       # () int32 — engine passes (= iters + entry pass)
+    n_retained: jax.Array   # () int32 — events retained by Alg. 3
+    v_final: jax.Array      # () f32  — variance at stage exit
+    v_entry: jax.Array      # () f32  — variance at stage entry
+    v_history: jax.Array    # (max_iters,) f32 padded per-iteration variance
+    omega_entry: jax.Array  # (3,) hypothesis at stage entry (sort reference)
+    omega_exit: jax.Array   # (3,) hypothesis at stage exit
+
+
+class WindowResult(NamedTuple):
+    omega: jax.Array                    # (3,) final estimate
+    stages: Tuple[StageTrace, ...]      # one per stage
+
+
+EnginePass = Callable[[EventWindow, jax.Array, jax.Array],
+                      Tuple[jax.Array, jax.Array]]
+
+
+def make_engine_pass(cam: Camera, stage: StageConfig,
+                     dtype=jnp.float32) -> EnginePass:
+    """One full engine pass at stage s: warp+vote+accumulate (IWE & dIWE),
+    streaming blur statistics, Eq. 12 objective + gradient.
+
+    Returns fn(ev, weights, omega) -> (variance, grad(3,)).
+    """
+    taps = gaussian_taps(stage.blur_taps, stage.blur_sigma, dtype)
+    Hs, Ws = stage.grid(cam)
+
+    def engine(ev: EventWindow, weights: jax.Array, omega: jax.Array):
+        channels = build_iwe(ev, omega, cam, stage.scale, weights=weights)
+        stats = streaming_stats(channels, taps)
+        return stats_to_objective(stats, Hs * Ws)
+
+    return engine
+
+
+def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
+               cam: Camera, stage: StageConfig, cfg: CmaxConfig,
+               stage_idx: int, engine: EnginePass
+               ) -> Tuple[jax.Array, cgpr.CgprState, StageTrace]:
+    """Residence at one stage under Alg. 1 (or the fixed schedule)."""
+    tables = sort_events(ev, omega, cam, stage)
+    weights = tables.weights
+
+    # Alg. 1 line 2: V_prev <- V_s(omega)  (entry pass, also primes grad)
+    v_entry, g_entry = engine(ev, weights, omega)
+
+    if cfg.adaptive:
+        max_iters = stage.max_iters
+    else:
+        max_iters = int(cfg.fixed_iters[stage_idx])
+
+    update = cgpr.step if cfg.use_cgpr else cgpr.gradient_ascent_step
+    alpha0 = jnp.asarray(cfg.step_size * stage.step_scale, cfg.dtype)
+    alpha_floor = alpha0 / 64.0
+
+    # Update(omega, s) is made robust with accept/reject step control: a
+    # proposal that *decreases* the variance is rejected (omega reverts) and
+    # the step halves — the Alg. 1 gain test then only sees accepted
+    # improvements, as it does on the prototype (whose CG-PR update is
+    # well-behaved at its operating step sizes). A stage gives up and
+    # promotes when the step has collapsed to alpha0/64. Every proposal,
+    # accepted or not, costs one engine pass and is counted as one.
+
+    def cond(carry):
+        _, _, _, _, it, done, _, _ = carry
+        return (~done) & (it < max_iters)
+
+    def body(carry):
+        st, v_prev, g, _unused, it, _, hist, alpha = carry
+        om, ost = st
+        om_p, ost_p = update(om, g, ost, alpha)      # propose
+        v_p, g_p = engine(ev, weights, om_p)         # one engine pass
+        hist = hist.at[it].set(v_p)
+        improved = v_p > v_prev
+        sel = lambda a, b: jax.tree.map(
+            lambda x, y: jnp.where(improved, x, y), a, b)
+        om = sel(om_p, om)
+        ost = sel(ost_p, ost)
+        g = sel(g_p, g)
+        if cfg.adaptive:
+            g_norm = (v_p - v_prev) / jnp.maximum(jnp.abs(v_prev), 1e-12)
+            done_ok = improved & (g_norm < stage.tau)      # saturated
+        else:
+            done_ok = jnp.bool_(False)
+        alpha = jnp.where(improved, alpha, alpha * 0.5)
+        done_stuck = (~improved) & (alpha < alpha_floor) if cfg.adaptive \
+            else jnp.bool_(False)
+        v_prev = jnp.where(improved, v_p, v_prev)
+        return ((om, ost), v_prev, g, 0, it + 1, done_ok | done_stuck,
+                hist, alpha)
+
+    hist0 = jnp.full((max_iters,), jnp.nan, dtype=v_entry.dtype)
+    (om, ost), v_fin, _, _, iters, _, hist, _ = jax.lax.while_loop(
+        cond, body,
+        ((omega, opt_state), v_entry, g_entry, 0, jnp.int32(0),
+         jnp.bool_(False), hist0, alpha0))
+
+    trace = StageTrace(iters=iters, passes=iters + 1,
+                       n_retained=tables.n_retained, v_final=v_fin,
+                       v_entry=v_entry, v_history=hist,
+                       omega_entry=omega, omega_exit=om)
+    return om, ost, trace
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def estimate_window(ev: EventWindow, omega0: jax.Array,
+                    cfg: CmaxConfig) -> WindowResult:
+    """Estimate the rotation rate for one event window (warm-started)."""
+    cam = cfg.camera
+    omega = omega0.astype(cfg.dtype)
+    opt_state = cgpr.init_state(3, cfg.dtype)
+    traces = []
+    for si, stage in enumerate(cfg.stages):
+        engine = make_engine_pass(cam, stage, cfg.dtype)
+        # CG history does not transfer across resolutions (the objective
+        # surface changes scale) — restart CG at each stage, as HW does.
+        opt_state = cgpr.init_state(3, cfg.dtype)
+        omega, opt_state, tr = _run_stage(ev, omega, opt_state, cam, stage,
+                                          cfg, si, engine)
+        traces.append(tr)
+    return WindowResult(omega=omega, stages=tuple(traces))
+
+
+def estimate_sequence(windows: EventWindow, omega_init: jax.Array,
+                      cfg: CmaxConfig) -> Tuple[jax.Array, WindowResult]:
+    """Sequential estimation over a batch of windows with warm starts.
+
+    `windows` arrays have a leading window axis (K, N). Returns
+    (omegas (K,3), stacked WindowResult traces).
+    """
+    def scan_fn(omega, win_slice):
+        ev = EventWindow(*win_slice)
+        res = estimate_window(ev, omega, cfg)
+        return res.omega, res
+
+    leaves = (windows.x, windows.y, windows.t, windows.p, windows.valid)
+    omega_fin, results = jax.lax.scan(scan_fn, omega_init, leaves)
+    return results.omega, results
+
+
+def estimate_windows_parallel(windows: EventWindow, omega0s: jax.Array,
+                              cfg: CmaxConfig) -> WindowResult:
+    """vmap over independent windows (no warm-start chaining) — the
+    building block for data-parallel multi-device CMAX (distributed.py)."""
+    return jax.vmap(lambda x, y, t, p, v, o: estimate_window(
+        EventWindow(x, y, t, p, v), o, cfg))(
+        windows.x, windows.y, windows.t, windows.p, windows.valid, omega0s)

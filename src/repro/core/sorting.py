@@ -1,0 +1,130 @@
+"""Pixel-grouped sorting with stage-aware subsampling (paper Algorithm 3).
+
+The hardware runs a 3-state flow (count / prefix-scan / permute) to reorder
+the event window into pixel-group runs and enforce the stage keep-ratio
+rho_s = s with a *group-local* stride. The JAX realization is the same
+logical pass built from segment_sum + cumsum + two stable argsorts:
+
+  state 1 (count):   cnt[p]    = segment_sum(1, gid)
+  state 2 (scan):    offset[]  = exclusive cumsum(cnt); StagePolicy gives
+                     per-group stride/act/budget
+  state 3 (permute): stable sort by group id, group-local rank via
+                     arange - offset[gid], retain rank % stride == 0,
+                     then a second stable sort packs retained events first
+                     (still in pixel-group order) -> perm[]
+
+Sorting runs ONCE per stage entry with the warm-start reference warp and its
+tables are reused across all iterations of the stage (paper §4) — we mirror
+that: the retained-event weights are computed here and held fixed while the
+optimizer iterates.
+
+`p_ref` (the group id at sort time) and `last_in_pg` are emitted exactly as
+the hardware forwards them to the accumulation stage; the energy model uses
+them to count inlier/outlier commits and pending-merge hits.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import warp_events
+from .types import Camera, EventWindow, StageConfig
+
+
+class StagePolicyOut(NamedTuple):
+    stride: jax.Array   # (P,) int32 subsample stride per group
+    budget: jax.Array   # (P,) int32 retained-event budget k per group
+    act: jax.Array      # (P,) bool  group activity flag
+
+
+def stage_policy(cnt: jax.Array, keep_ratio: float,
+                 max_per_group: Optional[int] = None) -> StagePolicyOut:
+    """StagePolicy(cnt[p], s) of Alg. 3: keep-ratio rho_s = s realized as a
+    group-local stride round(1/rho); optional per-group hard budget cap
+    (disabled by default = paper-faithful)."""
+    stride_val = max(1, int(round(1.0 / max(keep_ratio, 1e-6))))
+    stride = jnp.full_like(cnt, stride_val)
+    budget = (cnt + stride_val - 1) // stride_val      # ceil(cnt/stride)
+    if max_per_group is not None:
+        budget = jnp.minimum(budget, max_per_group)
+    act = cnt > 0
+    return StagePolicyOut(stride=stride, budget=budget, act=act)
+
+
+class SortTables(NamedTuple):
+    """Stage-local metadata tables (active/offset/perm of Alg. 3) plus the
+    streaming side-band signals (p_ref, last_in_pg) and a dense per-event
+    weight vector in ORIGINAL event order for the masked XLA datapath."""
+
+    perm: jax.Array        # (N,) int32: event idx, group-ordered, retained first
+    retained: jax.Array    # (N,) bool, in perm order
+    p_ref: jax.Array       # (N,) int32 group id per perm slot (P = invalid)
+    last_in_pg: jax.Array  # (N,) bool, in perm order (retained only)
+    cnt: jax.Array         # (P,) int32 events per group (valid only)
+    offset: jax.Array      # (P+1,) int32 exclusive prefix sum of cnt
+    act: jax.Array         # (P,) bool group activity
+    n_retained: jax.Array  # () int32
+    weights: jax.Array     # (N,) float32, ORIGINAL order: 1.0 iff retained
+
+
+def sort_events(ev: EventWindow, omega_ref: jax.Array, cam: Camera,
+                stage: StageConfig,
+                max_per_group: Optional[int] = None) -> SortTables:
+    """Algorithm 3 for one stage, using the warm-start reference warp."""
+    Hs, Ws = stage.grid(cam)
+    P = Hs * Ws
+    N = ev.n
+
+    w = warp_events(ev, omega_ref, cam, stage.scale)
+    # invalid events go to dump bucket P
+    key = jnp.where(w.in_range, w.p_act, P).astype(jnp.int32)
+
+    # --- state 1: count ---
+    cnt_p1 = jax.ops.segment_sum(jnp.ones((N,), jnp.int32), key,
+                                 num_segments=P + 1)
+    cnt = cnt_p1[:P]
+
+    # --- state 2: offsets + stage policy ---
+    offset = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(cnt_p1)[:-1].astype(jnp.int32)])
+    policy = stage_policy(cnt, stage.keep_ratio, max_per_group)
+
+    # --- state 3: permute (stable sort by group, group-local rank) ---
+    order1 = jnp.argsort(key, stable=True)             # group-major order
+    key_s = key[order1]
+    rank = jnp.arange(N, dtype=jnp.int32) - offset[key_s]
+    stride_s = policy.stride[jnp.clip(key_s, 0, P - 1)]
+    budget_s = policy.budget[jnp.clip(key_s, 0, P - 1)]
+    retained_s = ((key_s < P)
+                  & (rank % stride_s == 0)
+                  & (rank // stride_s < budget_s))
+
+    # pack retained first, preserving group order (stable sort on a key that
+    # sends dropped/invalid events to bucket P)
+    key2 = jnp.where(retained_s, key_s, P)
+    order2 = jnp.argsort(key2, stable=True)
+    perm = order1[order2]
+    retained = retained_s[order2]
+    p_ref = jnp.where(retained, key_s[order2], P).astype(jnp.int32)
+
+    nxt = jnp.concatenate([p_ref[1:], jnp.full((1,), P, jnp.int32)])
+    last_in_pg = retained & (p_ref != nxt)
+
+    n_retained = jnp.sum(retained.astype(jnp.int32))
+    weights = jnp.zeros((N,), jnp.float32).at[perm].set(
+        retained.astype(jnp.float32))
+
+    return SortTables(perm=perm, retained=retained, p_ref=p_ref,
+                      last_in_pg=last_in_pg, cnt=cnt,
+                      offset=offset[:P + 1], act=policy.act,
+                      n_retained=n_retained, weights=weights)
+
+
+def retained_window(ev: EventWindow, tables: SortTables) -> EventWindow:
+    """Physically reorder the window into perm order with validity =
+    retained — the compacted stream the Pallas kernel consumes."""
+    g = lambda a: a[tables.perm]
+    return EventWindow(x=g(ev.x), y=g(ev.y), t=g(ev.t), p=g(ev.p),
+                       valid=g(ev.valid) & tables.retained)

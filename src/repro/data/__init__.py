@@ -1,0 +1,1 @@
+from . import events, lm  # noqa: F401

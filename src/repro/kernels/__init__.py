@@ -1,0 +1,7 @@
+# Kernel layer: the two compute hot-spots the paper optimizes in hardware,
+# re-derived as Pallas TPU kernels (see DESIGN.md §2 for the mapping).
+from .ops import IweAccumOut, blur_stats, fused_engine_pass, iwe_accum
+from . import ref
+
+__all__ = ["IweAccumOut", "blur_stats", "fused_engine_pass", "iwe_accum",
+           "ref"]

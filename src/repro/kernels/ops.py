@@ -1,0 +1,153 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`iwe_accum` : host-side tap expansion + tile sort + capacity packing
+              (the Alg.-3 analogue at VMEM-tile granularity), then the
+              tile_accumulate kernel, then spatial reassembly.
+`blur_stats`: pad + lane-align the channel stack, then the streaming
+              blur/statistics kernel.
+
+Both default to interpret=True (this container is CPU-only; TPU is the
+compile target). The oracles live in ref.py; tests sweep shapes/dtypes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.contrast import gaussian_taps, stats_to_objective
+from repro.core.geometry import warp_events
+from repro.core.iwe import TAP_OFFSETS, event_deltas
+from repro.core.types import Camera, EventWindow
+
+from .blur_stats import blur_stats_streaming
+from .iwe_accum import tile_accumulate
+
+
+class IweAccumOut(NamedTuple):
+    channels: jax.Array   # (4, H_s, W_s) f32
+    spilled: jax.Array    # () int32 — taps dropped by capacity (0 if enough)
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cam", "scale", "tile", "capacity", "interpret",
+                     "dtype"))
+def iwe_accum(ev: EventWindow, omega: jax.Array, cam: Camera, scale: float,
+              weights: Optional[jax.Array] = None,
+              tile: Tuple[int, int] = (8, 128), capacity: int = 1024,
+              interpret: bool = True, dtype=jnp.float32) -> IweAccumOut:
+    """Fused warp + bilinear vote + tile-partitioned accumulation.
+
+    capacity is the fixed per-tile tap budget (the HW outlier-FIFO-depth
+    analogue); `spilled` reports dropped taps — callers size capacity so
+    it stays 0 (tests assert it).
+    """
+    Hs, Ws = cam.grid(scale)
+    TH, TW = tile
+    nty, ntx = -(-Hs // TH), -(-Ws // TW)
+    T = nty * ntx
+    N = ev.n
+
+    w = warp_events(ev, omega, cam, scale)
+    deltas = event_deltas(w, ev.p, weights).astype(dtype)    # (N,4,4)
+
+    # expand the 4 taps into independent contributions
+    pix_y, pix_x, dval = [], [], []
+    for ti, (dy, dx) in enumerate(TAP_OFFSETS):
+        pix_y.append(w.y0 + dy)
+        pix_x.append(w.x0 + dx)
+        dval.append(deltas[:, ti, :])
+    ty = jnp.concatenate(pix_y)                              # (4N,)
+    tx = jnp.concatenate(pix_x)
+    dv = jnp.concatenate(dval, axis=0)                       # (4N, 4)
+    valid = jnp.concatenate([w.in_range] * 4)
+
+    tile_id = jnp.where(valid, (ty // TH) * ntx + tx // TW, T)
+    pix_local = jnp.where(valid, (ty % TH) * TW + tx % TW, -1)
+
+    order = jnp.argsort(tile_id)                             # tile-major
+    tid_s = tile_id[order]
+    pix_s = pix_local[order].astype(jnp.int32)
+    dv_s = dv[order]
+
+    cnt = jax.ops.segment_sum(jnp.ones_like(tid_s), tid_s,
+                              num_segments=T + 1)[:T]
+    offset = jnp.concatenate([jnp.zeros((1,), cnt.dtype),
+                              jnp.cumsum(cnt)[:-1]])
+
+    slot = offset[:, None] + jnp.arange(capacity)[None, :]   # (T, CAP)
+    in_cap = jnp.arange(capacity)[None, :] < cnt[:, None]
+    src = jnp.clip(slot, 0, 4 * N - 1).astype(jnp.int32)
+    pix_tile = jnp.where(in_cap, pix_s[src], -1)
+    dv_tile = jnp.where(in_cap[..., None], dv_s[src], 0).astype(dtype)
+
+    tiles = tile_accumulate(pix_tile, dv_tile, n_tiles=T, cap=capacity,
+                            p_tile=TH * TW, interpret=interpret)
+
+    # reassemble (T, P_TILE, 4) -> (4, Hs, Ws)
+    img = tiles.reshape(nty, ntx, TH, TW, 4)
+    img = img.transpose(4, 0, 2, 1, 3).reshape(4, nty * TH, ntx * TW)
+    img = img[:, :Hs, :Ws]
+
+    # spill pass: taps beyond the per-tile capacity take the slow path
+    # (XLA scatter-add), exactly like the hardware drains its outlier FIFO
+    # through the commit port — the kernel is exact for ANY capacity and
+    # `spilled` becomes a telemetry counter for capacity tuning.
+    rank = jnp.arange(4 * N, dtype=jnp.int32) - offset[jnp.clip(
+        tid_s, 0, T - 1)].astype(jnp.int32)
+    spill_mask = (tid_s < T) & (rank >= capacity)
+    sy = jnp.clip(ty[order], 0, nty * TH - 1)
+    sx = jnp.clip(tx[order], 0, ntx * TW - 1)
+    sdelta = jnp.where(spill_mask[:, None], dv_s, 0).astype(jnp.float32)
+    pad = jnp.zeros((4, nty * TH, ntx * TW), jnp.float32)
+    pad = pad.at[:, sy, sx].add(sdelta.T)
+    img = img + pad[:, :Hs, :Ws]
+
+    spilled = jnp.sum(jnp.maximum(cnt - capacity, 0)).astype(jnp.int32)
+    return IweAccumOut(channels=img, spilled=spilled)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_taps", "sigma", "rb", "interpret"))
+def blur_stats(channels: jax.Array, num_taps: int, sigma: float,
+               rb: int = 16, interpret: bool = True) -> jax.Array:
+    """Streaming separable Gaussian + Eq.-12 running sums. channels is the
+    (4, H, W) stack; returns (8,) f32 [S1,S2,Gx,Gy,Gz,Tx,Ty,Tz]."""
+    _, H, W = channels.shape
+    k = num_taps
+    half = k // 2
+    n_blocks = -(-(H + half) // rb)
+    Hp = n_blocks * rb
+    Wp = _ceil_to(W + half, 128)
+    ch = jnp.zeros((4, Hp, Wp), jnp.float32)
+    ch = ch.at[:, :H, :W].set(channels.astype(jnp.float32))
+    taps = gaussian_taps(k, sigma, jnp.float32)
+    return blur_stats_streaming(ch, taps, rb=rb, k=k, H=H, W=W,
+                                interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cam", "scale", "num_taps", "sigma", "tile",
+                     "capacity", "interpret"))
+def fused_engine_pass(ev: EventWindow, omega: jax.Array, cam: Camera,
+                      scale: float, num_taps: int, sigma: float,
+                      weights: Optional[jax.Array] = None,
+                      tile: Tuple[int, int] = (8, 128),
+                      capacity: int = 1024, interpret: bool = True):
+    """Full kernel-path engine pass: accumulate + streaming stats ->
+    (variance, grad) — the drop-in replacement for
+    pipeline.make_engine_pass."""
+    acc = iwe_accum(ev, omega, cam, scale, weights=weights, tile=tile,
+                    capacity=capacity, interpret=interpret)
+    Hs, Ws = cam.grid(scale)
+    stats = blur_stats(acc.channels, num_taps, sigma, interpret=interpret)
+    var, grad = stats_to_objective(stats, Hs * Ws)
+    return var, grad, acc.spilled

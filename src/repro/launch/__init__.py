@@ -1,0 +1,3 @@
+# Launch layer: production mesh, dry-run driver, train/serve entry points.
+# NOTE: do not import jax at module scope here — dryrun.py must set
+# XLA_FLAGS before anything touches jax device state.

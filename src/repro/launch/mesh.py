@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must be able to set
+XLA_FLAGS before the first jax initialization.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips for the multi-pod
+    dry-run. Axes: (pod,) data, model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int = 0, model: int = 2):
+    """Small mesh over however many (possibly fake) devices exist — used
+    by sharding unit tests run in subprocesses with
+    xla_force_host_platform_device_count."""
+    n = n_devices or len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,67 @@
+"""Serving launcher: prefill + batched decode demo on the reduced configs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --batch 4 --prompt-len 16 --gen 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import make_serve_step
+    from repro.models import transformer as tfm
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.key(0)
+    max_len = args.prompt_len + args.gen
+    params = tfm.init_params(key, cfg, max_len=max_len)
+    B = args.batch
+
+    cross = None
+    if cfg.family == "vlm":
+        cross = jax.random.normal(key, (B, cfg.cross_source_len,
+                                        cfg.d_model)) * 0.1
+    if cfg.is_enc_dec:
+        frames = jax.random.normal(key, (B, cfg.cross_source_len,
+                                         cfg.d_model)) * 0.1
+        cross = tfm.encode(params, cfg, frames)
+
+    # prefill through the decode path (populates the cache)
+    cache = tfm.init_cache(cfg, B, max_len=max_len)
+    prompt = jax.random.randint(key, (B, args.prompt_len), 0,
+                                cfg.vocab_size)
+    serve = jax.jit(make_serve_step(cfg))
+    tok = prompt[:, :1]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len - 1):
+        _, _, cache = serve(params, cache, prompt[:, t:t + 1], cross)
+    # greedy generation
+    tok = prompt[:, -1:]
+    out = []
+    for _ in range(args.gen):
+        tok, logits, cache = serve(params, cache, tok, cross)
+        out.append(tok)
+    toks = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    total = args.prompt_len - 1 + args.gen
+    print(f"{cfg.name}: served {B} requests, {total} steps in "
+          f"{dt:.2f}s ({1e3 * dt / total:.1f} ms/step incl first-call "
+          f"compile)")
+    print("generated token ids (req 0):", toks[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 50 --seq 256 --batch 8 --smoke
+`--smoke` uses the arch's reduced config on the local device mesh; the
+full configs are exercised via dryrun.py (this container is CPU-only).
+On a real fleet this same entry point runs under `jax.distributed` with
+the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="checkpoints/train_cli")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--grad-compression", default=None,
+                    choices=[None, "int8"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.lm import LMDataConfig, batches
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    mesh = make_smoke_mesh(model=1)
+    data = LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                        global_batch=args.batch)
+    tc = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt,
+                     ckpt_every=max(args.steps // 4, 1), lr=args.lr,
+                     grad_compression=args.grad_compression,
+                     microbatch=args.microbatch)
+    extra = None
+    if cfg.family == "vlm" or cfg.is_enc_dec:
+        import numpy as np
+        extra = {"cross_source": np.zeros(
+            (args.batch, cfg.cross_source_len, cfg.d_model), np.float32)}
+    hist = train(cfg, tc, mesh, batches(data), max_len=args.seq,
+                 extra_batch=extra)
+    print(f"final loss {hist['loss'][-1]:.4f} "
+          f"(start {hist['loss'][0]:.4f}), "
+          f"restarts={hist['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from .config import ModelConfig
+from .model import (SHAPES, ShapeSpec, abstract_opt_state, abstract_params,
+                    input_specs, loss_fn, make_eval_step, make_prefill_step,
+                    make_serve_step, make_train_step, shape_applicable)
+from . import layers, moe, recurrent, transformer
+
+__all__ = [
+    "ModelConfig", "SHAPES", "ShapeSpec", "abstract_opt_state",
+    "abstract_params", "input_specs", "loss_fn", "make_eval_step",
+    "make_prefill_step", "make_serve_step", "make_train_step",
+    "shape_applicable", "layers", "moe", "recurrent", "transformer",
+]

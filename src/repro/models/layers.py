@@ -1,0 +1,322 @@
+"""Transformer building blocks: norms, embeddings, RoPE, GQA / cross /
+sliding-window attention, gated FFNs. Pure JAX with explicit param pytrees
+(plain nested dicts) so sharding rules can address every leaf by path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig) -> Params:
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def norm_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] \
+            + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# embeddings
+# ----------------------------------------------------------------------
+
+def embedding_init(key, cfg: ModelConfig) -> Params:
+    emb = jax.random.normal(key, (cfg.vocab_size, cfg.d_model),
+                            jnp.float32) * 0.02
+    return {"table": emb.astype(_dtype(cfg))}
+
+
+def embedding_apply(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed_apply(p_emb: Params, p_head: Optional[Params],
+                  x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings or p_head is None:
+        w = p_emb["table"].T
+    else:
+        w = p_head["w"]
+    return jnp.einsum("bsd,dv->bsv", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def lm_head_init(key, cfg: ModelConfig) -> Optional[Params]:
+    if cfg.tie_embeddings:
+        return None
+    w = jax.random.normal(key, (cfg.d_model, cfg.vocab_size),
+                          jnp.float32) * 0.02
+    return {"w": w.astype(_dtype(cfg))}
+
+
+def learned_pos_init(key, cfg: ModelConfig, max_len: int) -> Params:
+    return {"pos": (jax.random.normal(key, (max_len, cfg.d_model),
+                                      jnp.float32) * 0.02
+                    ).astype(_dtype(cfg))}
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(cfg: ModelConfig) -> jax.Array:
+    """Inverse frequencies over the rotated fraction of head_dim."""
+    rot = int(cfg.head_dim * cfg.rope_fraction)
+    rot -= rot % 2
+    return 1.0 / (cfg.rope_theta
+                  ** (jnp.arange(0, rot, 2, jnp.float32) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) or (S,). Rotates the first
+    `rope_fraction` of Dh (chatglm-style 2d RoPE uses fraction=0.5)."""
+    freqs = rope_freqs(cfg)
+    rot = 2 * freqs.shape[0]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    xp = x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# attention (GQA, cross, sliding-window; optional KV cache)
+# ----------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = 0.02
+    dt = _dtype(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (d, cfg.n_heads, hd)) * std).astype(dt),
+        "wk": (jax.random.normal(k2, (d, cfg.n_kv_heads, hd)) * std).astype(dt),
+        "wv": (jax.random.normal(k3, (d, cfg.n_kv_heads, hd)) * std).astype(dt),
+        "wo": (jax.random.normal(k4, (cfg.n_heads, hd, d)) * std).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, kv_x: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, mask, cfg: ModelConfig
+          ) -> jax.Array:
+    """q: (B,Sq,H,Dh); k,v: (B,Sk,Hkv,Dh); GQA via head grouping."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk",
+                        qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(Dh)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def _sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                  cfg: ModelConfig, kind: str, chunk: int) -> jax.Array:
+    """Query-chunked attention: never materializes the (Sq, Sk) score
+    matrix — peak temp goes from O(Sq*Sk) to O(chunk*Sk) per head, the §Perf
+    fix for 32k prefill. Each chunk body is checkpointed so the backward
+    pass recomputes its scores instead of saving them."""
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    n_chunks = Sq // chunk
+    qg = q.reshape(B, n_chunks, chunk, Hkv, g, Dh)
+    qg = qg.transpose(1, 0, 2, 3, 4, 5)        # (n, B, c, Hkv, g, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kj = jnp.arange(k.shape[1])[None, :]
+
+    def body(idx, qc):
+        qi = idx * chunk + jnp.arange(chunk)[:, None]
+        m = kj <= qi
+        if kind == "local" and cfg.local_window:
+            m = m & (kj > qi - cfg.local_window)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32), kf)
+        s = s / math.sqrt(Dh)
+        s = jnp.where(m[None, None, None, :, :], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", w, vf)
+        return idx + 1, o.astype(q.dtype)
+
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(lambda c, qc: body(c, qc), jnp.int32(0), qg)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dh)
+    return out
+
+
+def causal_mask(Sq: int, Sk: int, offset: int = 0) -> jax.Array:
+    """(1, Sq, Sk) mask: query i attends keys j <= i + offset."""
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Sk)[None, :]
+    return (kj <= qi)[None]
+
+
+def local_mask(Sq: int, Sk: int, window: int, offset: int = 0) -> jax.Array:
+    qi = jnp.arange(Sq)[:, None] + offset
+    kj = jnp.arange(Sk)[None, :]
+    return ((kj <= qi) & (kj > qi - window))[None]
+
+
+def attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                    kv_source: Optional[jax.Array] = None,
+                    kind: str = "causal",
+                    positions: Optional[jax.Array] = None,
+                    cache: Optional[Params] = None,
+                    ) -> Tuple[jax.Array, Optional[Params]]:
+    """kind: causal | local | full | cross. With `cache`, x is the new
+    suffix (decode: Sq=1) and keys/values append at cache['idx']."""
+    B, Sq, _ = x.shape
+    kv_x = kv_source if kv_source is not None else x
+    q, k, v = _qkv(p, x, kv_x, cfg)
+
+    if positions is None:
+        pos_q = jnp.arange(Sq)
+    else:
+        pos_q = positions
+    if cfg.pos_embedding == "rope" and kind != "cross":
+        q = apply_rope(q, pos_q, cfg)
+        if cache is None:
+            k = apply_rope(k, pos_q, cfg)
+        else:
+            k = apply_rope(k, pos_q, cfg)
+
+    new_cache = None
+    if cache is not None and kind != "cross":
+        idx = cache["idx"]
+        if "pos" in cache:
+            # ring-buffer cache for local attention: O(window) memory, the
+            # key to sub-quadratic long-context decode (long_500k)
+            W = cache["k"].shape[1]
+            assert Sq == 1, "ring cache supports single-token decode"
+            slot = idx % W
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=1)
+            pc = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], idx[None], slot, axis=0)
+            new_cache = {"k": kc, "v": vc, "pos": pc, "idx": idx + Sq}
+            k, v = kc, vc
+            qi = idx + jnp.arange(Sq)[:, None]
+            kp = pc[None, :]                       # global key positions
+            m = (kp >= 0) & (kp <= qi) & (kp > qi - cfg.local_window)
+            mask = m[None]
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx,
+                                                     axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx,
+                                                     axis=1)
+            new_cache = {"k": kc, "v": vc, "idx": idx + Sq}
+            k, v = kc, vc
+            Sk = k.shape[1]
+            kj = jnp.arange(Sk)[None, :]
+            qi = idx + jnp.arange(Sq)[:, None]
+            m = kj <= qi
+            if kind == "local" and cfg.local_window:
+                m &= kj > qi - cfg.local_window
+            mask = m[None]
+    else:
+        Sk = k.shape[1]
+        if cfg.attn_q_chunk and kind in ("causal", "local") \
+                and Sq > cfg.attn_q_chunk and Sq % cfg.attn_q_chunk == 0:
+            out = _sdpa_chunked(q, k, v, cfg, kind, cfg.attn_q_chunk)
+            out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return out, new_cache
+        if kind == "causal":
+            mask = causal_mask(Sq, Sk)
+        elif kind == "local":
+            mask = local_mask(Sq, Sk, cfg.local_window)
+        else:   # full / cross
+            mask = None
+
+    out = _sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------
+# FFN
+# ----------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    std = 0.02
+    if cfg.ffn_kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wg": (jax.random.normal(k1, (d, d_ff)) * std).astype(dt),
+            "wu": (jax.random.normal(k2, (d, d_ff)) * std).astype(dt),
+            "wd": (jax.random.normal(k3, (d_ff, d)) * std).astype(dt),
+        }
+    k1, k2 = jax.random.split(key)
+    return {
+        "wu": (jax.random.normal(k1, (d, d_ff)) * std).astype(dt),
+        "bu": jnp.zeros((d_ff,), dt),
+        "wd": (jax.random.normal(k2, (d_ff, d)) * std).astype(dt),
+        "bd": jnp.zeros((d,), dt),
+    }
+
+
+def ffn_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wu"]) + p["bu"])
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"]) + p["bd"]

@@ -1,0 +1,214 @@
+"""Step factories: train_step / serve_step / input_specs per architecture.
+
+These are what the launcher jits + shards; they are deliberately pure
+functions of (params, opt_state, batch) so the dry-run can lower them from
+ShapeDtypeStructs alone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optim as optim_lib
+
+from .config import ModelConfig
+from . import transformer as tfm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic decode state; decode shapes need a
+    decoder (all assigned archs have one)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention arch: 500k-context decode "
+                       "skipped per brief (no sub-quadratic attention)")
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+# ----------------------------------------------------------------------
+# losses & steps
+# ----------------------------------------------------------------------
+
+def loss_fn(logits: jax.Array, labels: jax.Array,
+            z_loss: float = 1e-4) -> jax.Array:
+    """Token-mean cross entropy with z-loss, computed in f32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    ce = lse - true
+    return jnp.mean(ce) + z_loss * jnp.mean(lse ** 2)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg=None, *, mesh=None,
+                    dp_axes: Tuple[str, ...] = ("data",),
+                    use_ep: bool = False, act_sharding=None,
+                    optimizer: str = "adamw",
+                    remat_policy: str = "full",
+                    microbatch: int = 1, ep_fsdp: bool = False,
+                    accum_dtype=jnp.float32) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch: dict(tokens, labels [, cross_source]).
+
+    microbatch > 1 splits the global batch and accumulates grads via
+    lax.scan — activation (and MoE dispatch-buffer) temp memory scales
+    down ~1/microbatch while arithmetic is unchanged; the per-microbatch
+    DP all-reduce overlaps the next microbatch's compute under XLA async
+    collectives."""
+    if optimizer == "adamw":
+        ocfg = opt_cfg or optim_lib.AdamWConfig()
+        upd = functools.partial(optim_lib.adamw_update, ocfg)
+    else:
+        ocfg = opt_cfg or optim_lib.AdafactorConfig()
+        upd = functools.partial(optim_lib.adafactor_update, ocfg)
+
+    def compute_loss(params, batch):
+        logits = tfm.forward(params, cfg, batch["tokens"],
+                             cross_source=batch.get("cross_source"),
+                             mesh=mesh, dp_axes=dp_axes, use_ep=use_ep,
+                             act_sharding=act_sharding,
+                             remat_policy=remat_policy, ep_fsdp=ep_fsdp)
+        return loss_fn(logits, batch["labels"])
+
+    def step(params, opt_state, batch):
+        if microbatch > 1:
+            def split(x):
+                return x.reshape(microbatch, x.shape[0] // microbatch,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, one):
+                l, g = jax.value_and_grad(compute_loss)(params, one)
+                g = jax.tree.map(lambda a, b: a + b.astype(accum_dtype),
+                                 acc[1], g)
+                return (acc[0] + l, g), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(body, zero, mb)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = jax.value_and_grad(compute_loss)(params, batch)
+        params, opt_state = upd(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_eval_step(cfg: ModelConfig, *, mesh=None,
+                   dp_axes: Tuple[str, ...] = ("data",),
+                   use_ep: bool = False) -> Callable:
+    def step(params, batch):
+        logits = tfm.forward(params, cfg, batch["tokens"],
+                             cross_source=batch.get("cross_source"),
+                             mesh=mesh, dp_axes=dp_axes, use_ep=use_ep)
+        return {"loss": loss_fn(logits, batch["labels"]),
+                "logits_mean": logits.mean()}
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mesh=None,
+                      dp_axes: Tuple[str, ...] = ("data",),
+                      use_ep: bool = False, act_sharding=None,
+                      ep_fsdp: bool = False) -> Callable:
+    """Prefill: full forward returning last-position logits."""
+    def step(params, batch):
+        logits = tfm.forward(params, cfg, batch["tokens"],
+                             cross_source=batch.get("cross_source"),
+                             mesh=mesh, dp_axes=dp_axes, use_ep=use_ep,
+                             act_sharding=act_sharding, ep_fsdp=ep_fsdp)
+        return logits[:, -1]
+    return step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """Decode: one new token against a populated cache."""
+    def step(params, cache, token, cross_source=None):
+        logits, cache = tfm.decode_step(params, cfg, token, cache,
+                                        cross_source=cross_source)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+    return step
+
+
+# ----------------------------------------------------------------------
+# abstract inputs (dry-run stand-ins; no allocation)
+# ----------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: tokens (+labels for train) (B, S); decode: token (B, 1)
+    + the KV/recurrent cache of length S. Modality frontends are stubs:
+    `cross_source` is the precomputed patch/frame embedding sequence."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    tok = jnp.int32
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = sds((B, S), tok)
+        specs["labels"] = sds((B, S), tok)
+    elif shape.kind == "prefill":
+        specs["tokens"] = sds((B, S), tok)
+    else:   # decode
+        specs["token"] = sds((B, 1), tok)
+        specs["cache"] = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, S))
+    if cfg.family == "vlm":
+        n_patches = cfg.cross_source_len or 1600
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        specs["cross_source"] = sds((B, n_patches, cfg.d_model), dt)
+    if cfg.is_enc_dec:
+        n_frames = cfg.cross_source_len or 1500
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        # decode consumes the encoded memory; train/prefill the stub frames
+        specs["cross_source"] = sds((B, n_frames, cfg.d_model), dt)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, max_len: int = 0) -> PyTree:
+    """eval_shape the parameter pytree (no allocation — works for 1T)."""
+    need_pos = cfg.pos_embedding == "learned"
+    ml = max_len if max_len else 65536
+    return jax.eval_shape(
+        functools.partial(tfm.init_params, cfg=cfg,
+                          max_len=ml if need_pos else 0),
+        jax.random.key(0))
+
+
+def abstract_opt_state(cfg_or_params, optimizer: str = "adamw") -> PyTree:
+    params = cfg_or_params
+    if optimizer == "adamw":
+        return jax.eval_shape(
+            functools.partial(optim_lib.adamw_init,
+                              optim_lib.AdamWConfig()), params)
+    return jax.eval_shape(
+        functools.partial(optim_lib.adafactor_init,
+                          optim_lib.AdafactorConfig()), params)

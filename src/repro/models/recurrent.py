@@ -1,0 +1,293 @@
+"""Recurrent sequence-mixing blocks: xLSTM's mLSTM/sLSTM and Griffin's
+RG-LRU (recurrentgemma).
+
+TPU adaptation notes (DESIGN.md §2 applies here too):
+  * mLSTM trains/prefills in its *parallel quadratic form* (decay-masked
+    attention-like einsums -> MXU friendly) and decodes with the O(1)
+    matrix-memory recurrence.
+  * RG-LRU is a diagonal linear recurrence -> `jax.lax.associative_scan`
+    over time (log-depth, parallel); decode is a single fused step.
+  * sLSTM is inherently sequential (hidden-state mixing feeds back into the
+    gates) — the xLSTM paper accepts this and ships a custom CUDA kernel;
+    on TPU we keep the faithful `lax.scan` over time. This is the one block
+    where the GPU kernel's insight (fast sequential small-matmul loops)
+    does not transfer to a better TPU form.
+
+All cells are head-parallel; params are plain dicts (see layers.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Params, _dtype
+
+
+# ----------------------------------------------------------------------
+# mLSTM (matrix LSTM, exponential gating)
+# ----------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    std = 0.02
+    return {
+        "wq": (jax.random.normal(ks[0], (d, H, dh)) * std).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, H, dh)) * std).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, H, dh)) * std).astype(dt),
+        "wif": (jax.random.normal(ks[3], (d, H, 2)) * std).astype(jnp.float32),
+        "wo": (jax.random.normal(ks[4], (d, d)) * std).astype(dt),
+        "wog": (jax.random.normal(ks[5], (d, d)) * std).astype(dt),
+        "ln_scale": jnp.ones((H, dh), jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(p: Params, x: jax.Array, cfg: ModelConfig):
+    dh = cfg.d_model // cfg.n_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    gates = jnp.einsum("bsd,dhg->bshg", x.astype(jnp.float32), p["wif"])
+    log_i = gates[..., 0]                       # (B,S,H) pre-activation
+    log_f = jax.nn.log_sigmoid(gates[..., 1])   # log sigmoid forget
+    return q, k, v, log_i, log_f
+
+
+def _headnorm(h: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    hf = h.astype(jnp.float32)
+    ms = (hf * hf).mean(-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(ms + eps) * scale).astype(h.dtype)
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Parallel (quadratic) form over the full sequence. x: (B,S,d)."""
+    B, S, d = x.shape
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(p, x, cfg)
+    F = jnp.cumsum(log_f, axis=1)                       # (B,S,H)
+    # D~[i,j] = F_i - F_j + log_i_j   (j <= i)
+    Dt = (F[:, :, None, :] - F[:, None, :, :]
+          + log_i[:, None, :, :])                       # (B,Sq,Sk,H)
+    ii = jnp.arange(S)
+    causal = (ii[None, :, None] >= ii[None, None, :])[..., None]
+    Dt = jnp.where(causal, Dt, -jnp.inf)
+    m = jnp.max(Dt, axis=2, keepdims=True)              # (B,S,1,H)
+    m = jnp.maximum(m, -1e30)                           # guard all -inf
+    Dm = jnp.exp(Dt - m)                                # stabilized decay
+    scores = jnp.einsum("bqhe,bkhe->bqkh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    A = scores * Dm                                     # (B,Sq,Sk,H)
+    n = jnp.maximum(jnp.abs(A.sum(axis=2, keepdims=True)),
+                    jnp.exp(-m))                        # (B,S,1,H)
+    h = jnp.einsum("bqkh,bkhe->bqhe", A / n, v.astype(jnp.float32))
+    h = _headnorm(h, p["ln_scale"]).reshape(B, S, d).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"]))
+    return jnp.einsum("bsd,de->bse", h * og, p["wo"])
+
+
+def mlstm_init_cache(cfg: ModelConfig, B: int) -> Params:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return {
+        "C": jnp.zeros((B, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((B, H, dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_step(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Params]:
+    """One decode step. x: (B,1,d)."""
+    B, _, d = x.shape
+    q, k, v, log_i, log_f = _mlstm_qkv_gates(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # (B,H,dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]             # (B,H)
+    m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    fs = jnp.exp(log_f + m_prev - m_new)[..., None]
+    is_ = jnp.exp(log_i - m_new)[..., None]
+    kv = jnp.einsum("bhk,bhv->bhkv", k.astype(jnp.float32),
+                    v.astype(jnp.float32))
+    C = fs[..., None] * C_prev + is_[..., None] * kv
+    n = fs * n_prev + is_ * k.astype(jnp.float32)
+    qn = q.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qn)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qn)),
+                      jnp.exp(-m_new))[..., None]
+    h = _headnorm(num / den, p["ln_scale"]).reshape(B, 1, d).astype(x.dtype)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wog"]))
+    out = jnp.einsum("bsd,de->bse", h * og, p["wo"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ----------------------------------------------------------------------
+# sLSTM (scalar LSTM, exponential gating, per-head state mixing)
+# ----------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    return {
+        # input projections for z, i, f, o (fused)
+        "wx": (jax.random.normal(ks[0], (d, 4, H, dh)) * std).astype(dt),
+        # block-diagonal recurrent mixing per head, per gate
+        "rh": (jax.random.normal(ks[1], (4, H, dh, dh)) * std).astype(dt),
+        "wo": (jax.random.normal(ks[2], (d, d)) * std).astype(dt),
+        "ln_scale": jnp.ones((H, dh), jnp.float32),
+    }
+
+
+def slstm_init_cache(cfg: ModelConfig, B: int) -> Params:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((B, H, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((B, H, dh), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_cell(p: Params, xt: jax.Array, st: Params):
+    """xt: (B,4,H,dh) pre-projected inputs; st: state dict."""
+    rec = jnp.einsum("bhe,ghef->bghf", st["h"].astype(xt.dtype), p["rh"])
+    pre = (xt + rec).astype(jnp.float32)                # (B,4,H,dh)
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    fs = jnp.exp(log_f + st["m"] - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    c = fs * st["c"] + is_ * z
+    n = fs * st["n"] + is_
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sequential scan over time (faithful; see module docstring)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xg = jnp.einsum("bsd,dghe->bsghe", x, p["wx"])       # (B,S,4,H,dh)
+    st0 = slstm_init_cache(cfg, B)
+
+    def step(st, xt):
+        st = _slstm_cell(p, xt, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0, xg.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3)                         # (B,S,H,dh)
+    h = _headnorm(h, p["ln_scale"]).reshape(B, S, d).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, p["wo"])
+
+
+def slstm_step(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Params]:
+    B, _, d = x.shape
+    xg = jnp.einsum("bsd,dghe->bsghe", x, p["wx"])[:, 0]
+    st = _slstm_cell(p, xg, cache)
+    h = _headnorm(st["h"][:, None].reshape(B, 1, cfg.n_heads, -1),
+                  p["ln_scale"]).reshape(B, 1, d).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", h, p["wo"]), st
+
+
+# ----------------------------------------------------------------------
+# RG-LRU block (Griffin / recurrentgemma)
+# ----------------------------------------------------------------------
+
+_RG_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 7)
+    std = 0.02
+    # Lambda init so a = exp(-c*softplus(L)*r) sits in a useful range
+    lam = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.4, 0.9)
+    lam = jnp.log(jnp.exp(-jnp.log(lam) / _RG_C) - 1.0)  # inverse softplus
+    return {
+        "w_in": (jax.random.normal(ks[1], (d, dr)) * std).astype(dt),
+        "w_gate": (jax.random.normal(ks[2], (d, dr)) * std).astype(dt),
+        "conv": (jax.random.normal(ks[3], (cfg.conv1d_width, dr))
+                 * std).astype(dt),
+        "conv_b": jnp.zeros((dr,), dt),
+        "wa": (jax.random.normal(ks[4], (dr, dr)) * std).astype(jnp.float32),
+        "wxg": (jax.random.normal(ks[5], (dr, dr)) * std).astype(jnp.float32),
+        "lam": lam,
+        "w_out": (jax.random.normal(ks[6], (dr, d)) * std).astype(dt),
+    }
+
+
+def _rg_decay_inputs(p: Params, u: jax.Array):
+    """u: (..., dr) post-conv branch. Returns (log_a, gated_input) f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["wa"])
+    ig = jax.nn.sigmoid(uf @ p["wxg"])
+    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * r
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) \
+        * (ig * uf)
+    return log_a, x_in
+
+
+def _causal_conv(p: Params, u: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d over time. u: (B,S,dr). state: (B,W-1,dr)."""
+    W = p["conv"].shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(p["conv"][w] * up[:, w:w + u.shape[1]] for w in range(W))
+    new_state = up[:, -(W - 1):] if W > 1 else pad
+    return out + p["conv_b"], new_state
+
+
+def rglru_apply(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence form via associative scan. x: (B,S,d)."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"])
+    u, _ = _causal_conv(p, u)
+    log_a, x_in = _rg_decay_inputs(p, u)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate"])
+                       .astype(jnp.float32))
+    out = (h * gate).astype(x.dtype)
+    return jnp.einsum("bsr,rd->bsd", out, p["w_out"])
+
+
+def rglru_init_cache(cfg: ModelConfig, B: int) -> Params:
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((B, dr), jnp.float32),
+        "conv": jnp.zeros((B, cfg.conv1d_width - 1, dr), jnp.float32),
+    }
+
+
+def rglru_step(p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+               ) -> Tuple[jax.Array, Params]:
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"])
+    u, conv_state = _causal_conv(p, u, cache["conv"])
+    log_a, x_in = _rg_decay_inputs(p, u[:, 0:1])
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + x_in[:, 0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate"])
+                       .astype(jnp.float32))
+    out = (h[:, None] * gate).astype(x.dtype)
+    return jnp.einsum("bsr,rd->bsd", out, p["w_out"]), \
+        {"h": h, "conv": conv_state.astype(jnp.float32)}

@@ -1,0 +1,359 @@
+"""Model assembly: layer blocks by kind, scan-over-depth, KV/recurrent
+caches, encoder-decoder support. Covers all 10 assigned architectures via
+ModelConfig.block_pattern.
+
+Depth structure: [prefix unrolled] + [scan over full pattern periods] +
+[suffix unrolled]. Scanning keeps HLO compact (a 95-layer dense model
+lowers as one while-loop body), which matters for 512-way dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import recurrent as rec
+from .config import ModelConfig
+from .layers import (Params, attention_init, attention_apply, embedding_init,
+                     embedding_apply, ffn_init, ffn_apply, learned_pos_init,
+                     lm_head_init, norm_init, norm_apply, unembed_apply)
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------------
+# depth plan
+# ----------------------------------------------------------------------
+
+class DepthPlan:
+    """Split layer kinds into prefix / scanned periods / suffix."""
+
+    def __init__(self, cfg: ModelConfig):
+        kinds = list(cfg.layer_kinds)
+        self.prefix: List[str] = kinds[:cfg.first_dense_layers]
+        rest = kinds[cfg.first_dense_layers:]
+        period = len(cfg.block_pattern)
+        n_rep = len(rest) // period
+        self.n_rep = n_rep
+        self.period_kinds: Tuple[str, ...] = tuple(cfg.block_pattern)
+        self.suffix: List[str] = rest[n_rep * period:]
+
+    def __repr__(self):
+        return (f"DepthPlan(prefix={self.prefix}, "
+                f"{self.n_rep}x{self.period_kinds}, suffix={self.suffix})")
+
+
+# ----------------------------------------------------------------------
+# one block (layer) by kind
+# ----------------------------------------------------------------------
+
+def block_init(key, kind: str, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    if kind in ("attn", "local", "attn_dense"):
+        return {"ln1": norm_init(cfg), "attn": attention_init(ks[0], cfg),
+                "ln2": norm_init(cfg), "ffn": ffn_init(ks[1], cfg)}
+    if kind == "cross":
+        return {"ln1": norm_init(cfg), "attn": attention_init(ks[0], cfg),
+                "lnx": norm_init(cfg), "xattn": attention_init(ks[1], cfg),
+                "ln2": norm_init(cfg), "ffn": ffn_init(ks[2], cfg)}
+    if kind == "moe":
+        return {"ln1": norm_init(cfg), "attn": attention_init(ks[0], cfg),
+                "ln2": norm_init(cfg), "moe": moe_lib.moe_init(ks[1], cfg)}
+    if kind == "mlstm":
+        return {"ln1": norm_init(cfg), "cell": rec.mlstm_init(ks[0], cfg)}
+    if kind == "slstm":
+        return {"ln1": norm_init(cfg), "cell": rec.slstm_init(ks[0], cfg)}
+    if kind == "rglru":
+        return {"ln1": norm_init(cfg), "rec": rec.rglru_init(ks[0], cfg),
+                "ln2": norm_init(cfg), "ffn": ffn_init(ks[1], cfg)}
+    raise ValueError(kind)
+
+
+def block_cache_init(kind: str, cfg: ModelConfig, B: int,
+                     max_len: int) -> Optional[Params]:
+    dh = cfg.head_dim
+    if kind in ("attn", "local", "attn_dense", "moe"):
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        if kind == "local" and cfg.local_window and \
+                max_len > cfg.local_window:
+            # ring buffer: O(window) memory — sub-quadratic decode state
+            W = cfg.local_window
+            return {"k": jnp.zeros((B, W, cfg.n_kv_heads, dh), dt),
+                    "v": jnp.zeros((B, W, cfg.n_kv_heads, dh), dt),
+                    "pos": jnp.full((W,), -1, jnp.int32),
+                    "idx": jnp.zeros((), jnp.int32)}
+        return {"k": jnp.zeros((B, max_len, cfg.n_kv_heads, dh), dt),
+                "v": jnp.zeros((B, max_len, cfg.n_kv_heads, dh), dt),
+                "idx": jnp.zeros((), jnp.int32)}
+    if kind == "cross":
+        c = block_cache_init("attn", cfg, B, max_len)
+        return c
+    if kind == "mlstm":
+        return rec.mlstm_init_cache(cfg, B)
+    if kind == "slstm":
+        return rec.slstm_init_cache(cfg, B)
+    if kind == "rglru":
+        return rec.rglru_init_cache(cfg, B)
+    raise ValueError(kind)
+
+
+def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
+                cross_source: Optional[jax.Array] = None,
+                positions: Optional[jax.Array] = None,
+                cache: Optional[Params] = None, mesh=None,
+                dp_axes: Tuple[str, ...] = ("data",),
+                use_ep: bool = False, ep_fsdp: bool = False,
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Pre-norm residual block. Returns (x, new_cache)."""
+    new_cache = cache
+    if kind in ("attn", "local", "attn_dense", "moe", "cross"):
+        akind = "local" if kind == "local" else "causal"
+        h, new_cache = attention_apply(
+            p["attn"], norm_apply(p["ln1"], x, cfg), cfg, kind=akind,
+            positions=positions, cache=cache)
+        x = x + h
+        if kind == "cross" and cross_source is not None:
+            h, _ = attention_apply(p["xattn"],
+                                   norm_apply(p["lnx"], x, cfg), cfg,
+                                   kv_source=cross_source, kind="cross")
+            x = x + h
+        if kind == "moe":
+            xn = norm_apply(p["ln2"], x, cfg)
+            if use_ep and mesh is not None:
+                x = x + moe_lib.moe_apply_ep(
+                    p["moe"], xn, cfg, mesh, dp_axes=dp_axes,
+                    fsdp_axis="data" if ep_fsdp else None)
+            else:
+                x = x + moe_lib.moe_apply(p["moe"], xn, cfg)
+        else:
+            x = x + ffn_apply(p["ffn"], norm_apply(p["ln2"], x, cfg), cfg)
+        return x, new_cache
+
+    if kind in ("mlstm", "slstm"):
+        xn = norm_apply(p["ln1"], x, cfg)
+        fn_seq = rec.mlstm_apply if kind == "mlstm" else rec.slstm_apply
+        fn_step = rec.mlstm_step if kind == "mlstm" else rec.slstm_step
+        if cache is None:
+            x = x + fn_seq(p["cell"], xn, cfg)
+        else:
+            h, new_cache = fn_step(p["cell"], xn, cache, cfg)
+            x = x + h
+        return x, new_cache
+
+    if kind == "rglru":
+        xn = norm_apply(p["ln1"], x, cfg)
+        if cache is None:
+            x = x + rec.rglru_apply(p["rec"], xn, cfg)
+        else:
+            h, new_cache = rec.rglru_step(p["rec"], xn, cache, cfg)
+            x = x + h
+        x = x + ffn_apply(p["ffn"], norm_apply(p["ln2"], x, cfg), cfg)
+        return x, new_cache
+
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------
+# whole model
+# ----------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, max_len: int = 0) -> Params:
+    plan = DepthPlan(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {"embed": embedding_init(keys[0], cfg)}
+    head = lm_head_init(keys[1], cfg)
+    if head is not None:
+        params["lm_head"] = head
+    if cfg.pos_embedding == "learned":
+        assert max_len > 0, "learned positions need max_len"
+        params["pos"] = learned_pos_init(keys[2], cfg, max_len)
+    params["final_norm"] = norm_init(cfg)
+
+    kp, ks, ksuf, kenc = jax.random.split(keys[3], 4)
+    params["prefix"] = [block_init(k, kind, cfg) for k, kind in
+                        zip(jax.random.split(kp, max(len(plan.prefix), 1)),
+                            plan.prefix)]
+    if plan.n_rep:
+        def one_period(k):
+            kk = jax.random.split(k, len(plan.period_kinds))
+            return [block_init(kk[i], kind, cfg)
+                    for i, kind in enumerate(plan.period_kinds)]
+        periods = [one_period(k) for k in jax.random.split(ks, plan.n_rep)]
+        params["scan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    params["suffix"] = [block_init(k, kind, cfg) for k, kind in
+                        zip(jax.random.split(ksuf, max(len(plan.suffix), 1)),
+                            plan.suffix)]
+
+    if cfg.is_enc_dec:
+        kk = jax.random.split(kenc, cfg.encoder_layers + 1)
+        params["encoder"] = {
+            "layers": [block_init(kk[i], "attn", cfg)
+                       for i in range(cfg.encoder_layers)],
+            "final_norm": norm_init(cfg),
+        }
+    return params
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Encoder over stubbed frontend embeddings (B, S_enc, d)."""
+    x = frames
+    for lp in params["encoder"]["layers"]:
+        h, _ = attention_apply(lp["attn"], norm_apply(lp["ln1"], x, cfg),
+                               cfg, kind="full")
+        x = x + h
+        x = x + ffn_apply(lp["ffn"], norm_apply(lp["ln2"], x, cfg), cfg)
+    return norm_apply(params["encoder"]["final_norm"], x, cfg)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            cross_source: Optional[jax.Array] = None, mesh=None,
+            dp_axes: Tuple[str, ...] = ("data",), use_ep: bool = False,
+            remat_scan: bool = True, act_sharding=None,
+            remat_policy: str = "full", ep_fsdp: bool = False
+            ) -> jax.Array:
+    """Full-sequence forward (training / prefill). Returns (B,S,V) logits
+    in f32.
+
+    act_sharding: optional NamedSharding for the inter-layer activation
+    carry (B,S,d). Passing a sequence-sharded spec (Megatron-style SP)
+    keeps the remat-saved scan carries sharded over the model axis —
+    without it, each of the L checkpointed carries is replicated across TP
+    ranks and activation memory explodes at 32k+ context."""
+    plan = DepthPlan(cfg)
+    B, S = tokens.shape
+    wsc = (lambda t: jax.lax.with_sharding_constraint(t, act_sharding)) \
+        if act_sharding is not None else (lambda t: t)
+    x = embedding_apply(params["embed"], tokens)
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos"]["pos"][None, :S]
+    x = wsc(x)
+    positions = jnp.arange(S)
+
+    if cfg.is_enc_dec:
+        cross_source = encode(params, cfg, cross_source)
+
+    bapply = functools.partial(block_apply, cfg=cfg,
+                               cross_source=cross_source,
+                               positions=positions, mesh=mesh,
+                               dp_axes=dp_axes, use_ep=use_ep,
+                               ep_fsdp=ep_fsdp)
+
+    for p_blk, kind in zip(params["prefix"], plan.prefix):
+        x, _ = bapply(p_blk, x, kind)
+
+    if plan.n_rep:
+        def period_body(xc, p_period):
+            for p_blk, kind in zip(p_period, plan.period_kinds):
+                xc, _ = bapply(p_blk, xc, kind)
+            return wsc(xc), None
+        if remat_scan:
+            # remat policy trades the ~25% re-forward compute (§Roofline
+            # `useful` column) against activation memory — §Perf H3 knob
+            if remat_policy == "dots":
+                period_body = jax.checkpoint(
+                    period_body,
+                    policy=jax.checkpoint_policies
+                    .dots_with_no_batch_dims_saveable)
+            else:
+                period_body = jax.checkpoint(period_body)
+        x, _ = jax.lax.scan(period_body, x, params["scan"])
+
+    for p_blk, kind in zip(params["suffix"], plan.suffix):
+        x, _ = bapply(p_blk, x, kind)
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    return unembed_apply(params["embed"], params.get("lm_head"), x, cfg)
+
+
+def cache_position(cache: Params) -> jax.Array:
+    """Current decode position = any attention cache's idx (they advance in
+    lockstep); 0 for pure-recurrent models (which ignore positions)."""
+    found: List[jax.Array] = []
+
+    def visit(c):
+        if isinstance(c, dict):
+            if "idx" in c:
+                idx = c["idx"]
+                found.append(idx if idx.ndim == 0 else idx.reshape(-1)[0])
+            else:
+                for v in c.values():
+                    visit(v)
+        elif isinstance(c, (list, tuple)):
+            for v in c:
+                visit(v)
+
+    visit(cache)
+    return found[0] if found else jnp.zeros((), jnp.int32)
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int) -> Params:
+    plan = DepthPlan(cfg)
+    cache: Params = {
+        "prefix": [block_cache_init(k, cfg, B, max_len)
+                   for k in plan.prefix],
+        "suffix": [block_cache_init(k, cfg, B, max_len)
+                   for k in plan.suffix],
+    }
+    if plan.n_rep:
+        one = [block_cache_init(k, cfg, B, max_len)
+               for k in plan.period_kinds]
+        cache["scan"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_rep,) + x.shape).copy(),
+            one)
+    return cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                cache: Params, *, cross_source: Optional[jax.Array] = None,
+                pos: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """One-token decode. token: (B,1) int32. Returns ((B,1,V) f32, cache)."""
+    plan = DepthPlan(cfg)
+    B = token.shape[0]
+    x = embedding_apply(params["embed"], token)
+    if pos is None:
+        pos = cache_position(cache)
+    positions = pos + jnp.arange(1)
+    if cfg.pos_embedding == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(params["pos"]["pos"], pos, 1,
+                                          axis=0)          # (1, d)
+        x = x + pe[None]                                    # (B,1,d)
+
+    # NOTE: for enc-dec models, `cross_source` here is the ALREADY-ENCODED
+    # memory (encode once at serve start, not per decode step)
+    bapply = functools.partial(block_apply, cfg=cfg,
+                               cross_source=cross_source,
+                               positions=positions)
+
+    new_prefix = []
+    for p_blk, kind, c in zip(params["prefix"], plan.prefix,
+                              cache["prefix"]):
+        x, nc = bapply(p_blk, x, kind, cache=c)
+        new_prefix.append(nc)
+
+    new_scan = None
+    if plan.n_rep:
+        def period_body(xc, inputs):
+            p_period, c_period = inputs
+            ncs = []
+            for p_blk, kind, c in zip(p_period, plan.period_kinds,
+                                      c_period):
+                xc, nc = bapply(p_blk, xc, kind, cache=c)
+                ncs.append(nc)
+            return xc, ncs
+        x, new_scan = jax.lax.scan(period_body, x,
+                                   (params["scan"], cache["scan"]))
+
+    new_suffix = []
+    for p_blk, kind, c in zip(params["suffix"], plan.suffix,
+                              cache["suffix"]):
+        x, nc = bapply(p_blk, x, kind, cache=c)
+        new_suffix.append(nc)
+
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed_apply(params["embed"], params.get("lm_head"), x, cfg)
+    return logits, {"prefix": new_prefix, "scan": new_scan,
+                    "suffix": new_suffix}

@@ -1,0 +1,5 @@
+from .analysis import (HW, analytic_flops, analytic_hbm_bytes,
+                       roofline_terms, summarize_cell)
+
+__all__ = ["HW", "analytic_flops", "analytic_hbm_bytes", "roofline_terms",
+           "summarize_cell"]

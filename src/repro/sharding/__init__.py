@@ -1,0 +1,5 @@
+from .rules import (batch_specs, cache_specs, dp_axes_of, param_specs,
+                    to_named, with_divisibility)
+
+__all__ = ["batch_specs", "cache_specs", "dp_axes_of", "param_specs",
+           "to_named", "with_divisibility"]

@@ -1,0 +1,243 @@
+"""Parameter / activation / cache PartitionSpec rules.
+
+Conventions (Megatron-style TP on the `model` axis, DP over `pod`+`data`,
+optional FSDP over `data` for >=8B-param archs, EP = experts on `model`):
+
+  embed.table        (V, D)      -> ("model", fsdp)      vocab-parallel
+  lm_head.w          (D, V)      -> (fsdp, "model")      column-parallel
+  attn.wq/wk/wv      (D, H, dh)  -> (fsdp, "model", -)   heads sharded
+  attn.wo            (H, dh, D)  -> ("model", -, fsdp)   row-parallel
+  ffn.wg/wu          (D, F)      -> (fsdp, "model")
+  ffn.wd             (F, D)      -> ("model", fsdp)
+  moe.w*             (E, D, F)   -> ("model", fsdp, -)   expert-parallel
+  rnn in/out         (D, R)/(R, D) -> channel dim on "model"
+  norms/scalars                  -> replicated
+
+Every rule is guarded by divisibility: an axis that does not divide the
+mesh axis size is dropped to None (e.g. 2 KV heads on a 16-way model axis
+-> replicated KV, exactly what GQA serving does in practice).
+
+Scan-stacked parameters get a leading None for the depth axis.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def dp_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def with_divisibility(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop spec axes that don't divide their dimension."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape)
+                                                         - len(spec))):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            fixed.append(axis)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+# (path regex, base spec builder). `f` = fsdp axes or None; specs are for
+# the UNSTACKED leaf; scan stacking prepends a None automatically.
+def _rules(f):
+    return [
+        (r"embed/table$",        lambda: P("model", f)),
+        (r"lm_head/w$",          lambda: P(f, "model")),
+        (r"pos/pos$",            lambda: P(None, None)),
+        (r"(attn|xattn)/w[qkv]$", lambda: P(f, "model", None)),
+        (r"(attn|xattn)/wo$",    lambda: P("model", None, f)),
+        (r"(attn|xattn)/b[qkv]$", lambda: P("model", None)),
+        (r"ffn/w[gu]$",          lambda: P(f, "model")),
+        (r"ffn/wd$",             lambda: P("model", f)),
+        (r"ffn/b[u]$",           lambda: P("model")),
+        (r"ffn/bd$",             lambda: P(None)),
+        (r"moe/router$",         lambda: P(None, None)),
+        (r"moe/w[gu]$",          lambda: P("model", f, None)),
+        (r"moe/wd$",             lambda: P("model", None, f)),
+        (r"moe/shared/w[gu]$",   lambda: P(f, "model")),
+        (r"moe/shared/wd$",      lambda: P("model", f)),
+        # mLSTM
+        (r"cell/w[qkv]$",        lambda: P(f, "model", None)),
+        (r"cell/wif$",           lambda: P(None, "model", None)),
+        (r"cell/wog$",           lambda: P(f, "model")),
+        (r"cell/wo$",            lambda: P("model", f)),
+        (r"cell/ln_scale$",      lambda: P("model", None)),
+        # sLSTM
+        (r"cell/wx$",            lambda: P(f, None, "model", None)),
+        (r"cell/rh$",            lambda: P(None, "model", None, None)),
+        # RG-LRU
+        (r"rec/w_in$",           lambda: P(f, "model")),
+        (r"rec/w_gate$",         lambda: P(f, "model")),
+        (r"rec/conv$",           lambda: P(None, "model")),
+        (r"rec/conv_b$",         lambda: P("model")),
+        (r"rec/w[a-z]*g?$",      lambda: P(None, "model")),   # wa, wxg
+        (r"rec/lam$",            lambda: P("model")),
+        (r"rec/w_out$",          lambda: P("model", f)),
+        # norms & anything residual: replicated
+        (r"(ln\d?|lnx|final_norm)/(scale|bias)$", lambda: P()),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(abstract_params: PyTree, cfg: ModelConfig, mesh: Mesh,
+                fsdp: bool = False) -> PyTree:
+    """PartitionSpec tree matching the parameter pytree."""
+    f = "data" if (fsdp and "data" in mesh.axis_names) else None
+    rules = [(re.compile(rx), mk) for rx, mk in _rules(f)]
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        in_scan = "/scan/" in ("/" + ps + "/")
+        base = None
+        for rx, mk in rules:
+            if rx.search(ps):
+                base = mk()
+                break
+        if base is None:
+            base = P()   # unknown leaf: replicate (safe default)
+        if in_scan:
+            base = P(*((None,) + tuple(base)))
+        return with_divisibility(base, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def batch_specs(batch: PyTree, mesh: Mesh) -> PyTree:
+    """Inputs: shard the batch dim over (pod, data); replicate the rest."""
+    dp = dp_axes_of(mesh)
+
+    def assign(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        return with_divisibility(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(assign, batch)
+
+
+def cache_specs(abstract_cache: PyTree, cfg: ModelConfig,
+                mesh: Mesh) -> PyTree:
+    """Decode caches: batch over DP; KV heads over model when divisible,
+    else KV *sequence* over model (flash-decode style), else replicated.
+    Recurrent states: channel/head dim over model."""
+    dp = dp_axes_of(mesh)
+    msize = mesh.shape["model"]
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or ps.endswith("idx"):
+            return P()
+        if ps.endswith("/pos"):
+            return P(None)
+        if re.search(r"/(k|v)$", ps) and leaf.ndim == 4:
+            B, S, Hkv, dh = leaf.shape
+            # scan-stacked caches have a leading depth axis
+            lead = ()
+            if leaf.ndim > 4:
+                lead = (None,)
+            if Hkv % msize == 0:
+                spec = P(dp, None, "model", None)
+            elif S % msize == 0:
+                spec = P(dp, "model", None, None)
+            else:
+                spec = P(dp, None, None, None)
+            return with_divisibility(spec, leaf.shape, mesh)
+        if re.search(r"/(k|v)$", ps) and leaf.ndim == 5:   # stacked
+            _, B, S, Hkv, dh = leaf.shape
+            if Hkv % msize == 0:
+                spec = P(None, dp, None, "model", None)
+            elif S % msize == 0:
+                spec = P(None, dp, "model", None, None)
+            else:
+                spec = P(None, dp, None, None, None)
+            return with_divisibility(spec, leaf.shape, mesh)
+        if ps.endswith("/C") or ps.endswith("/n") or ps.endswith("/m") \
+                or ps.endswith("/h") or ps.endswith("/c"):
+            # recurrent states: (depth?, B, H/dr, ...) — shard the first
+            # non-batch feature axis over model
+            nd = leaf.ndim
+            stacked = ps.find("scan") >= 0
+            spec_list = [None] * nd
+            bpos = 1 if stacked else 0
+            if bpos < nd:
+                spec_list[bpos] = dp
+            if bpos + 1 < nd:
+                spec_list[bpos + 1] = "model"
+            return with_divisibility(P(*spec_list), leaf.shape, mesh)
+        if ps.endswith("/conv"):
+            nd = leaf.ndim
+            spec_list = [None] * nd
+            stacked = ps.find("scan") >= 0
+            bpos = 1 if stacked else 0
+            spec_list[bpos] = dp
+            spec_list[nd - 1] = "model"
+            return with_divisibility(P(*spec_list), leaf.shape, mesh)
+        # fallback: replicate
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_cache)
+
+
+def adafactor_state_specs(aopt: PyTree, pspecs: PyTree, aparams: PyTree,
+                          mesh: Mesh) -> PyTree:
+    """Specs for AdafactorState(step, vr, vc): the factored moments keep
+    their parameter's spec minus the factored-out axis (vr drops the last
+    dim, vc the second-to-last). Replicating them instead costs ~660 GB/dev
+    for a 1T MoE (measured — see EXPERIMENTS §Perf H3)."""
+    def vr_spec(spec, p):
+        t = tuple(spec) + (None,) * (len(p.shape) - len(tuple(spec)))
+        out = P(*t[:-1]) if len(p.shape) >= 2 else P(*t)
+        shape = p.shape[:-1] if len(p.shape) >= 2 else p.shape
+        return with_divisibility(out, shape, mesh)
+
+    def vc_spec(spec, p):
+        if len(p.shape) >= 2:
+            t = tuple(spec) + (None,) * (len(p.shape) - len(tuple(spec)))
+            out = P(*(t[:-2] + (t[-1],)))
+            shape = p.shape[:-2] + p.shape[-1:]
+        else:
+            out, shape = P(None), (1,)
+        return with_divisibility(out, shape, mesh)
+
+    import jax as _jax
+    vr = _jax.tree.map(vr_spec, pspecs, aparams,
+                       is_leaf=lambda x: isinstance(x, P))
+    vc = _jax.tree.map(vc_spec, pspecs, aparams,
+                       is_leaf=lambda x: isinstance(x, P))
+    return type(aopt)(step=P(), vr=vr, vc=vc)
+
+
+def to_named(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

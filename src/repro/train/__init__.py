@@ -1,0 +1,1 @@
+from . import checkpoint, ft, optim  # noqa: F401

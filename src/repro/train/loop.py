@@ -1,0 +1,210 @@
+"""Fault-tolerant training loop.
+
+Wires together: step factory (models.model), sharding rules, checkpointing
+(save/restore/resume), straggler detection, failure retry with elastic
+re-mesh, optional microbatch gradient accumulation and int8 gradient
+compression. This is the loop examples/lm_pretrain.py and the chaos test
+drive; launch/train.py is its CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import make_train_step
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.sharding import batch_specs, param_specs, to_named
+
+from . import checkpoint as ckpt_lib
+from . import optim as optim_lib
+from .ft import FaultInjector, RetryPolicy, StragglerDetector
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: str = "checkpoints/run0"
+    ckpt_every: int = 20
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    fsdp: bool = False
+    use_ep: bool = False
+    grad_compression: Optional[str] = None    # None | "int8"
+    microbatch: int = 1                       # grad-accum splits
+
+
+def _maybe_compress(step_fn, comp: bool):
+    """Wrap the grads inside the step with int8 error-feedback
+    compression."""
+    return step_fn   # composition happens in make_step below
+
+
+def make_step(cfg: ModelConfig, tc: TrainConfig, mesh) -> Callable:
+    """jit'd train step with optional microbatching + compression."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ocfg = optim_lib.AdamWConfig(lr=tc.lr) if tc.optimizer == "adamw" \
+        else optim_lib.AdafactorConfig(lr=tc.lr)
+    upd = functools.partial(optim_lib.adamw_update, ocfg) \
+        if tc.optimizer == "adamw" else \
+        functools.partial(optim_lib.adafactor_update, ocfg)
+
+    from repro.models.model import loss_fn
+
+    def compute_loss(params, batch):
+        logits = tfm.forward(params, cfg, batch["tokens"],
+                             cross_source=batch.get("cross_source"),
+                             mesh=mesh, dp_axes=dp, use_ep=tc.use_ep)
+        return loss_fn(logits, batch["labels"])
+
+    grad_fn = jax.value_and_grad(compute_loss)
+
+    def step(params, opt_state, comp_state, batch):
+        if tc.microbatch > 1:
+            # split batch into microbatches, accumulate grads via scan —
+            # overlaps each microbatch's DP all-reduce with the next
+            # microbatch's compute under XLA async collectives
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(tc.microbatch, B // tc.microbatch,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, mbatch):
+                loss_g, grads = grad_fn(params, mbatch)
+                acc_loss, acc_g = acc
+                return (acc_loss + loss_g,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(body, zero, mb)
+            loss = loss / tc.microbatch
+            grads = jax.tree.map(lambda g: g / tc.microbatch, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        if tc.grad_compression == "int8":
+            grads, comp_state = optim_lib.compress_grads(grads, comp_state)
+
+        params, opt_state = upd(grads, opt_state, params)
+        gnorm = optim_lib._global_norm(grads)
+        return params, opt_state, comp_state, {"loss": loss,
+                                               "grad_norm": gnorm}
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    comp_state: Any
+    step: int
+
+
+def init_state(cfg: ModelConfig, tc: TrainConfig, mesh,
+               max_len: int) -> TrainState:
+    key = jax.random.key(tc.seed)
+    with jax.default_device(jax.devices("cpu")[0]):
+        params = tfm.init_params(key, cfg, max_len=max_len)
+    pspecs = param_specs(params, cfg, mesh, fsdp=tc.fsdp)
+    params = jax.device_put(params, to_named(pspecs, mesh))
+    if tc.optimizer == "adamw":
+        opt_state = optim_lib.adamw_init(optim_lib.AdamWConfig(lr=tc.lr),
+                                         params)
+    else:
+        opt_state = optim_lib.adafactor_init(
+            optim_lib.AdafactorConfig(lr=tc.lr), params)
+    comp_state = optim_lib.compression_init(params) \
+        if tc.grad_compression else {"none": jnp.zeros(())}
+    return TrainState(params=params, opt_state=opt_state,
+                      comp_state=comp_state, step=0)
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, mesh,
+          batches: Iterator[Tuple[np.ndarray, np.ndarray]],
+          max_len: int, injector: Optional[FaultInjector] = None,
+          extra_batch: Optional[Dict[str, np.ndarray]] = None
+          ) -> Dict[str, Any]:
+    """Run the fault-tolerant loop. Returns summary metrics."""
+    detector = StragglerDetector()
+    retry = RetryPolicy()
+    history: Dict[str, list] = {"loss": [], "step_time": [],
+                                "stragglers": [], "restarts": 0,
+                                "remesh_requests": 0}
+
+    def body(restart_count: int):
+        state = init_state(cfg, tc, mesh, max_len)
+        start = 0
+        if ckpt_lib.latest_step(tc.ckpt_dir) is not None:
+            tree_like = {"params": state.params,
+                         "opt_state": state.opt_state}
+            shardings = {
+                "params": to_named(param_specs(state.params, cfg, mesh,
+                                               fsdp=tc.fsdp), mesh),
+                "opt_state": jax.tree.map(
+                    lambda l: NamedSharding(mesh, P(*([None] * l.ndim))),
+                    state.opt_state),
+            }
+            restored, extra = ckpt_lib.restore(tc.ckpt_dir, tree_like,
+                                               shardings=shardings)
+            state.params = restored["params"]
+            state.opt_state = restored["opt_state"]
+            start = extra["next_step"]
+            print(f"[ckpt] resumed at step {start}")
+        step_fn = make_step(cfg, tc, mesh)
+
+        for step_idx in range(start, tc.steps):
+            toks, labels = next(batches)
+            batch = {"tokens": jnp.asarray(toks),
+                     "labels": jnp.asarray(labels)}
+            if extra_batch:
+                batch.update({k: jnp.asarray(v)
+                              for k, v in extra_batch.items()})
+            bspecs = batch_specs(batch, mesh)
+            batch = jax.device_put(batch, to_named(bspecs, mesh))
+
+            if injector is not None:
+                injector.maybe_fail(step_idx)
+                injector.maybe_straggle(step_idx)
+
+            t0 = time.perf_counter()
+            state.params, state.opt_state, state.comp_state, metrics = \
+                step_fn(state.params, state.opt_state, state.comp_state,
+                        batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            history["loss"].append(loss)
+            history["step_time"].append(dt)
+            if detector.observe(dt):
+                history["stragglers"].append(step_idx)
+                if detector.should_remesh:
+                    history["remesh_requests"] += 1
+                    detector.consecutive = 0
+            state.step = step_idx + 1
+
+            if tc.log_every and step_idx % tc.log_every == 0:
+                print(f"[train] step {step_idx} loss {loss:.4f} "
+                      f"({dt * 1e3:.0f} ms)")
+            if tc.ckpt_every and (step_idx + 1) % tc.ckpt_every == 0:
+                ckpt_lib.save(tc.ckpt_dir, state.step,
+                              {"params": state.params,
+                               "opt_state": state.opt_state},
+                              extra={"next_step": state.step},
+                              keep=tc.keep)
+
+    history["restarts"] = retry.run(body)
+    return history

@@ -1,0 +1,33 @@
+"""Shared test fixtures: tiny deterministic event windows."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import Camera, EventWindow
+from repro.data import events as ev_data
+
+
+def small_camera() -> Camera:
+    return Camera(width=64, height=48, fx=53.0, fy=53.0, cx=32.0, cy=24.0)
+
+
+def random_window(n=512, cam=None, seed=0, valid_frac=1.0) -> EventWindow:
+    cam = cam or small_camera()
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(2, cam.width - 3, n).round().astype(np.float32)
+    y = rng.uniform(2, cam.height - 3, n).round().astype(np.float32)
+    t = np.sort(rng.uniform(0, 0.03, n)).astype(np.float32)
+    p = rng.choice([-1.0, 1.0], n).astype(np.float32)
+    valid = rng.random(n) < valid_frac
+    return EventWindow(x=jnp.asarray(x), y=jnp.asarray(y), t=jnp.asarray(t),
+                       p=jnp.asarray(p), valid=jnp.asarray(valid))
+
+
+def structured_window(n=2048, cam=None, seed=0, omega=(1.5, -0.8, 2.0),
+                      window_dt=0.03):
+    """A window generated from the simulator with known ground truth."""
+    cam = cam or Camera()
+    spec = ev_data.SequenceSpec(name="t", n_windows=1, events_per_window=n,
+                                n_features=60, seed=seed, window_dt=window_dt,
+                                camera=cam, jerk_prob=0.0)
+    wins, om_true, _ = ev_data.make_sequence(spec)
+    return ev_data.window_slice(wins, 0), om_true[0]

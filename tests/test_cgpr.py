@@ -1,0 +1,58 @@
+"""CG-PR optimizer unit tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import cgpr
+
+
+def test_first_step_is_steepest_ascent():
+    st = cgpr.init_state()
+    g = jnp.array([1.0, 2.0, -1.0])
+    d, st2 = cgpr.direction(g, st)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(g))
+    assert not bool(st2.first)
+
+
+def test_pr_beta_clipped_nonnegative():
+    st = cgpr.init_state()
+    g1 = jnp.array([1.0, 0.0, 0.0])
+    _, st = cgpr.direction(g1, st)
+    # g2 chosen so PR beta would be negative: g2 . (g2 - g1) < 0
+    g2 = jnp.array([0.5, 0.0, 0.0])
+    d2, _ = cgpr.direction(g2, st)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(g2))  # beta == 0
+
+
+def test_direction_is_ascent_direction():
+    rng = np.random.default_rng(0)
+    st = cgpr.init_state()
+    for _ in range(20):
+        g = jnp.asarray(rng.normal(size=3), jnp.float32)
+        d, st = cgpr.direction(g, st)
+        assert float(jnp.dot(d, g)) > 0.0
+
+
+def test_cgpr_maximizes_quadratic():
+    """CG-PR ascent on a concave quadratic converges to the maximum."""
+    A = jnp.array([[2.0, 0.3, 0.0], [0.3, 1.0, 0.1], [0.0, 0.1, 3.0]])
+    xstar = jnp.array([0.5, -1.0, 0.7])
+    f = lambda x: -0.5 * (x - xstar) @ A @ (x - xstar)
+    gf = jax.grad(f)
+    x = jnp.zeros(3)
+    st = cgpr.init_state()
+    alpha = 0.05
+    for i in range(300):
+        g = gf(x)
+        x, st = cgpr.step(x, g, st, alpha)
+        if i % 50 == 49:
+            alpha *= 0.5   # the pipeline's controller halves on overshoot
+    assert float(jnp.linalg.norm(x - xstar)) < 0.05
+
+
+def test_gradient_ascent_step_moves_uphill():
+    f = lambda x: -jnp.sum(x ** 2)
+    x = jnp.array([1.0, -2.0, 0.5])
+    st = cgpr.init_state()
+    x2, _ = cgpr.gradient_ascent_step(x, jax.grad(f)(x), st, 0.1)
+    assert float(f(x2)) > float(f(x))

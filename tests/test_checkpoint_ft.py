@@ -1,0 +1,159 @@
+"""Checkpointing (atomic commit, rotation, resume, reshard-on-load),
+fault-tolerance primitives, and optimizer unit tests."""
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.ft import FaultInjector, RetryPolicy, StragglerDetector
+from repro.train import optim as optim_lib
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    k1, k2 = jax.random.split(k)
+    return {"a": {"w": jax.random.normal(k1, (8, 16)),
+                  "b": jnp.zeros((16,))},
+            "scan": jax.random.normal(k2, (3, 4, 4)),
+            "step": jnp.int32(7)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 10, t, extra={"next_step": 10})
+    restored, extra = ckpt.restore(tmp_path, t)
+    assert extra["next_step"] == 10
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b)), t, restored)
+
+
+def test_latest_and_rotation(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    assert sorted(ckpt.committed_steps(tmp_path)) == [4, 5]
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    # simulate a crash mid-save: step_2 exists without _COMMITTED
+    d = tmp_path / "step_00000002"
+    d.mkdir()
+    (d / "manifest.json").write_text(json.dumps({"step": 2, "leaves": {},
+                                                 "extra": {}}))
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path, _tree())
+
+
+def test_restore_casts_dtype(tmp_path):
+    t = {"w": jnp.ones((4,), jnp.float32)}
+    ckpt.save(tmp_path, 1, t)
+    like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+    restored, _ = ckpt.restore(tmp_path, like)
+    assert restored["w"].dtype == jnp.bfloat16
+
+
+# ---------------- fault tolerance ----------------
+
+def test_retry_policy_restarts_then_succeeds():
+    calls = []
+
+    def body(restarts):
+        calls.append(restarts)
+        if restarts < 2:
+            raise RuntimeError("injected")
+
+    n = RetryPolicy(max_restarts=5, backoff_s=0.0).run(body)
+    assert n == 2
+    assert calls == [0, 1, 2]
+
+
+def test_retry_policy_gives_up():
+    def body(restarts):
+        raise RuntimeError("always")
+    with pytest.raises(RuntimeError):
+        RetryPolicy(max_restarts=2, backoff_s=0.0).run(body)
+
+
+def test_straggler_detector_flags_outliers():
+    det = StragglerDetector(warmup=5, z_threshold=3.0, patience=2)
+    flags = [det.observe(0.1 + 0.001 * (i % 3)) for i in range(20)]
+    assert not any(flags)
+    assert det.observe(1.5)          # 15x slower -> straggler
+    assert not det.should_remesh     # patience=2
+    assert det.observe(1.5)
+    assert det.should_remesh
+
+
+def test_fault_injector_fires_once():
+    inj = FaultInjector(fail_at=(3,))
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)   # second pass after restart: no failure
+
+
+# ---------------- optimizers ----------------
+
+def test_adamw_decreases_quadratic_loss():
+    cfg = optim_lib.AdamWConfig(lr=0.1, warmup_steps=1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    st = optim_lib.adamw_init(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, st = optim_lib.adamw_update(cfg, g, st, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_decreases_quadratic_loss():
+    cfg = optim_lib.AdafactorConfig(lr=0.05)
+    params = {"w": jnp.full((4, 4), 3.0)}
+    st = optim_lib.adafactor_init(cfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, st = optim_lib.adafactor_update(cfg, g, st, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adafactor_memory_is_factored():
+    params = {"w": jnp.zeros((128, 256))}
+    st = optim_lib.adafactor_init(optim_lib.AdafactorConfig(), params)
+    n_state = sum(x.size for x in jax.tree.leaves((st.vr, st.vc)))
+    assert n_state == 128 + 256   # vs 128*256 for adam
+
+
+def test_int8_compression_error_feedback():
+    """Compressed grads converge to the true gradient on average: the
+    residual carries quantization error to the next step."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64,)),
+                          jnp.float32)}
+    comp = optim_lib.compression_init(g)
+    acc = jnp.zeros((64,))
+    for _ in range(50):
+        dq, comp = optim_lib.compress_grads(g, comp)
+        acc = acc + dq["w"]
+    # mean transmitted grad ~ true grad (error feedback kills the bias)
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g["w"]),
+                               atol=2e-3)
+
+
+def test_int8_quantize_range():
+    x = jnp.asarray([-1.0, 0.0, 0.5, 1.0])
+    q, s = optim_lib.quantize_int8(x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(q))) <= 127
+    np.testing.assert_allclose(np.asarray(optim_lib.dequantize_int8(q, s)),
+                               np.asarray(x), atol=0.02)

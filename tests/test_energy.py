@@ -1,0 +1,81 @@
+"""Invariants of the analytical energy/latency/memory-access model."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import CmaxConfig, estimate_window
+from repro.core.energy import (HwParams, account_window, locality_stats)
+from helpers import structured_window
+from repro.core.types import Camera
+
+
+@pytest.fixture(scope="module")
+def traced():
+    cam = Camera()
+    ev, om_true = structured_window(4096, cam=cam, seed=17)
+    cfg = CmaxConfig(camera=cam)
+    res = estimate_window(ev, om_true + 0.15, cfg)
+    return cam, cfg, ev, res
+
+
+def _stage_stats(cam, cfg, ev, res):
+    stats = []
+    for si, stage in enumerate(cfg.stages):
+        tr = res.stages[si]
+        loc = locality_stats(ev, jnp.asarray(tr.omega_entry),
+                             jnp.asarray(tr.omega_exit), cam, stage)
+        Hs, Ws = stage.grid(cam)
+        stats.append(dict(passes=float(tr.passes),
+                          n_retained=float(tr.n_retained),
+                          P=float(Hs * Ws), taps=stage.blur_taps,
+                          merge_reduction=float(loc["measured_reduction"])))
+    return stats
+
+
+def test_camel_fewer_accesses_and_cycles(traced):
+    cam, cfg, ev, res = traced
+    hw = HwParams()
+    stats = _stage_stats(cam, cfg, ev, res)
+    acc_c, e_c = account_window(stats, cfg, hw, camel=True, n_total=4096)
+    acc_b, e_b = account_window(stats, cfg, hw, camel=False, n_total=4096)
+    assert acc_c.total_accesses < acc_b.total_accesses
+    assert acc_c.cycles < acc_b.cycles
+    assert e_c["e_total_uj"] < e_b["e_total_uj"]
+    assert e_c["e_mem_rw_uj"] < e_b["e_mem_rw_uj"]
+
+
+def test_locality_stats_ranges(traced):
+    cam, cfg, ev, res = traced
+    for si, stage in enumerate(cfg.stages):
+        tr = res.stages[si]
+        loc = locality_stats(ev, jnp.asarray(tr.omega_entry),
+                             jnp.asarray(tr.omega_exit), cam, stage)
+        for key in ("active_ratio", "outlier_ratio",
+                    "expected_update_ratio"):
+            v = float(loc[key])
+            assert 0.0 <= v <= 1.0, (key, v)
+        # pending merge can only help on top of local accumulation
+        assert float(loc["measured_reduction"]) >= \
+            float(loc["expected_reduction"]) - 1e-6
+        # effective updates never exceed naive event-wise updates
+        assert float(loc["eff_updates"]) <= float(loc["naive_updates"])
+
+
+def test_zero_outliers_when_omega_unchanged(traced):
+    """If the sort-reference warp equals the current warp, p_act == p_ref
+    for every retained event."""
+    cam, cfg, ev, res = traced
+    stage = cfg.stages[0]
+    om = jnp.asarray(res.stages[0].omega_entry)
+    loc = locality_stats(ev, om, om, cam, stage)
+    assert float(loc["outlier_ratio"]) == 0.0
+
+
+def test_energy_breakdown_consistency(traced):
+    cam, cfg, ev, res = traced
+    hw = HwParams()
+    stats = _stage_stats(cam, cfg, ev, res)
+    acc, e = account_window(stats, cfg, hw, camel=True, n_total=4096)
+    assert e["e_total_uj"] == pytest.approx(
+        e["e_mem_rw_uj"] + e["e_logic_leak_uj"])
+    assert e["latency_s"] == pytest.approx(acc.cycles / hw.freq_hz)

@@ -1,0 +1,101 @@
+"""Unit tests for the warp front-end (paper Algorithm 2)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Camera, EventWindow, warp_events, warp_points
+from helpers import random_window, small_camera
+
+
+def test_zero_motion_identity():
+    """With omega = 0 the warp is the identity (times the stage scale)."""
+    ev = random_window(256)
+    cam = small_camera()
+    for s in (0.25, 0.5, 1.0):
+        w = warp_events(ev, jnp.zeros(3), cam, s)
+        np.testing.assert_allclose(np.asarray(w.xw), np.asarray(ev.x) * s,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(w.yw), np.asarray(ev.y) * s,
+                                   rtol=1e-6)
+
+
+def test_zero_dt_identity():
+    """Events at the reference time do not move, whatever omega is."""
+    cam = small_camera()
+    n = 64
+    ev = random_window(n)
+    ev = EventWindow(ev.x, ev.y, jnp.zeros_like(ev.t), ev.p, ev.valid)
+    w = warp_events(ev, jnp.array([3.0, -2.0, 1.0]), cam, 1.0, t_ref=0.0)
+    np.testing.assert_allclose(np.asarray(w.xw), np.asarray(ev.x), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(w.yw), np.asarray(ev.y), rtol=1e-5)
+
+
+def test_jacobian_matches_finite_difference():
+    """r_x, r_y are -d(x')/dw, -d(y')/dw: check against autodiff."""
+    ev = random_window(128, seed=4)
+    cam = small_camera()
+    om = jnp.array([0.7, -0.4, 1.2])
+    s = 0.5
+
+    def xy_of(omega):
+        w = warp_events(ev, omega, cam, s)
+        return jnp.stack([w.xw, w.yw])
+
+    jac = jax.jacfwd(xy_of)(om)           # (2, N, 3)
+    w = warp_events(ev, om, cam, s)
+    np.testing.assert_allclose(np.asarray(jac[0]), -np.asarray(w.rx),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(jac[1]), -np.asarray(w.ry),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_p_act_consistent_with_floor_coords():
+    ev = random_window(512, seed=7)
+    cam = small_camera()
+    w = warp_events(ev, jnp.array([0.5, 0.2, -0.9]), cam, 0.5)
+    Hs, Ws = cam.grid(0.5)
+    exp = np.asarray(w.y0) * Ws + np.asarray(w.x0)
+    got = np.asarray(w.p_act)
+    inr = np.asarray(w.in_range)
+    np.testing.assert_array_equal(got[inr], exp[inr])
+    assert (got[~inr] == -1).all()
+
+
+def test_invalid_events_marked_out_of_range():
+    ev = random_window(256, valid_frac=0.5, seed=9)
+    cam = small_camera()
+    w = warp_events(ev, jnp.zeros(3), cam, 1.0)
+    assert not np.asarray(w.in_range)[~np.asarray(ev.valid)].any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(-3, 3), st.floats(-3, 3), st.floats(-3, 3),
+       st.sampled_from([0.25, 0.5, 1.0]))
+def test_warp_points_matches_warp_events(wx, wy, wz, s):
+    """warp_points (simulator/test path) and warp_events (engine path)
+    agree on coordinates."""
+    ev = random_window(64, seed=11)
+    cam = small_camera()
+    om = jnp.array([wx, wy, wz], jnp.float32)
+    w = warp_events(ev, om, cam, s, t_ref=0.0)
+    px, py = warp_points(ev.x, ev.y, ev.t, om, cam, s)
+    np.testing.assert_allclose(np.asarray(w.xw), np.asarray(px), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(w.yw), np.asarray(py), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_warp_scaling_property():
+    """Scaled warp = scale * unscaled warp (Alg. 2 line 7)."""
+    ev = random_window(128, seed=2)
+    cam = small_camera()
+    om = jnp.array([1.0, 0.5, -0.7])
+    w1 = warp_events(ev, om, cam, 1.0)
+    for s in (0.25, 0.5):
+        ws = warp_events(ev, om, cam, s)
+        np.testing.assert_allclose(np.asarray(ws.xw), s * np.asarray(w1.xw),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ws.ry), s * np.asarray(w1.ry),
+                                   rtol=1e-5)

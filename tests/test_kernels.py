@@ -1,0 +1,157 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the brief: sweep shapes/dtypes and assert_allclose against the ref.py
+oracle for every kernel.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Camera, EventWindow, gaussian_taps, streaming_stats
+from repro.kernels import blur_stats, fused_engine_pass, iwe_accum
+from repro.kernels.ref import blur_stats_ref, iwe_accum_ref
+from helpers import random_window, small_camera
+
+# ----------------------------------------------------------------------
+# iwe_accum
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [64, 500, 2048])
+@pytest.mark.parametrize("scale", [0.25, 0.5, 1.0])
+def test_iwe_accum_matches_ref_shapes(n, scale):
+    cam = small_camera()
+    ev = random_window(n, cam=cam, seed=n)
+    om = jnp.array([0.8, -0.4, 1.1])
+    out = iwe_accum(ev, om, cam, scale, tile=(8, 128), capacity=4 * n)
+    ref = iwe_accum_ref(ev, om, cam, scale)
+    assert int(out.spilled) == 0
+    np.testing.assert_allclose(np.asarray(out.channels), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile", [(8, 128), (16, 128), (4, 256)])
+def test_iwe_accum_tile_sweep(tile):
+    cam = small_camera()
+    ev = random_window(700, cam=cam, seed=5)
+    om = jnp.array([-0.5, 0.7, 0.3])
+    out = iwe_accum(ev, om, cam, 1.0, tile=tile, capacity=2800)
+    ref = iwe_accum_ref(ev, om, cam, 1.0)
+    assert int(out.spilled) == 0
+    np.testing.assert_allclose(np.asarray(out.channels), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_iwe_accum_bf16_deltas_close():
+    """bf16 vote deltas with f32 accumulation: loose tolerance."""
+    cam = small_camera()
+    ev = random_window(512, cam=cam, seed=6)
+    om = jnp.array([0.2, 0.5, -0.6])
+    out = iwe_accum(ev, om, cam, 1.0, capacity=2048, dtype=jnp.bfloat16)
+    ref = iwe_accum_ref(ev, om, cam, 1.0)
+    assert int(out.spilled) == 0
+    np.testing.assert_allclose(np.asarray(out.channels), np.asarray(ref),
+                               rtol=0.05, atol=0.05)
+
+
+def test_iwe_accum_weights():
+    cam = small_camera()
+    ev = random_window(256, cam=cam, seed=7)
+    om = jnp.array([0.3, -0.2, 0.4])
+    wts = (jnp.arange(256) % 3 == 0).astype(jnp.float32)
+    out = iwe_accum(ev, om, cam, 0.5, weights=wts, capacity=1024)
+    ref = iwe_accum_ref(ev, om, cam, 0.5, weights=wts)
+    np.testing.assert_allclose(np.asarray(out.channels), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_iwe_accum_spill_counter():
+    """With a tiny capacity the kernel reports spilled taps (and the caller
+    can re-run with a bigger budget — the HW outlier-FIFO contract)."""
+    cam = small_camera()
+    ev = random_window(1024, cam=cam, seed=8)
+    om = jnp.zeros(3)
+    out = iwe_accum(ev, om, cam, 0.25, capacity=8)
+    assert int(out.spilled) > 0
+
+
+def test_iwe_accum_full_dvs_resolution():
+    """DAVIS240 full-res grid (the paper's actual IWE size)."""
+    cam = Camera()
+    ev = random_window(4096, cam=cam, seed=9)
+    om = jnp.array([1.0, -0.8, 1.5])
+    out = iwe_accum(ev, om, cam, 1.0, capacity=2048)
+    ref = iwe_accum_ref(ev, om, cam, 1.0)
+    assert int(out.spilled) == 0
+    np.testing.assert_allclose(np.asarray(out.channels), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# blur_stats
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hw", [(48, 64), (45, 60), (90, 120), (180, 240)])
+@pytest.mark.parametrize("k,sigma", [(3, 0.5), (5, 0.75), (9, 1.0)])
+def test_blur_stats_matches_ref(hw, k, sigma):
+    H, W = hw
+    rng = np.random.default_rng(H * k)
+    ch = jnp.asarray(rng.normal(size=(4, H, W)), jnp.float32)
+    out = blur_stats(ch, k, sigma)
+    ref = blur_stats_ref(ch, k, sigma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("rb", [4, 16, 64])
+def test_blur_stats_row_block_sweep(rb):
+    rng = np.random.default_rng(0)
+    ch = jnp.asarray(rng.normal(size=(4, 45, 60)), jnp.float32)
+    out = blur_stats(ch, 9, 1.0, rb=rb)
+    ref = blur_stats_ref(ch, 9, 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_blur_stats_impulse():
+    """An interior impulse: S1 must equal the kernel mass (=1)."""
+    ch = jnp.zeros((4, 32, 32)).at[0, 16, 16].set(1.0)
+    out = np.asarray(blur_stats(ch, 9, 1.0))
+    assert out[0] == pytest.approx(1.0, rel=1e-4)      # S1
+    assert out[1] > 0                                   # S2
+    np.testing.assert_allclose(out[2:], 0.0, atol=1e-6)  # no D channels
+
+
+def test_blur_stats_bf16_input():
+    rng = np.random.default_rng(1)
+    ch = jnp.asarray(rng.normal(size=(4, 48, 64)), jnp.bfloat16)
+    out = blur_stats(ch, 5, 0.75)
+    ref = blur_stats_ref(ch.astype(jnp.float32), 5, 0.75)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0.02, atol=0.05)
+
+
+# ----------------------------------------------------------------------
+# fused engine pass (kernel path == reference engine pass)
+# ----------------------------------------------------------------------
+
+
+def test_fused_engine_pass_matches_reference_engine():
+    from repro.core import CmaxConfig, make_engine_pass
+    cam = small_camera()
+    cfg = CmaxConfig(camera=cam)
+    ev = random_window(1024, cam=cam, seed=10)
+    om = jnp.array([0.4, -0.3, 0.6])
+    wts = jnp.ones(1024)
+    for stage in cfg.stages:
+        engine = make_engine_pass(cam, stage)
+        v_ref, g_ref = engine(ev, wts, om)
+        v_k, g_k, spilled = fused_engine_pass(
+            ev, om, cam, stage.scale, stage.blur_taps, stage.blur_sigma,
+            weights=wts, capacity=4096)
+        assert int(spilled) == 0
+        np.testing.assert_allclose(float(v_k), float(v_ref), rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_ref),
+                                   rtol=1e-3, atol=1e-6)

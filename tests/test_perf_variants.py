@@ -1,0 +1,100 @@
+"""Correctness of the §Perf optimization variants: they must be exact
+(or numerically-close) drop-ins for the baselines they replace."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                block_pattern=("attn",), dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_chunked_attention_matches_full():
+    cfg = _cfg()
+    cfg_c = dataclasses.replace(cfg, attn_q_chunk=32)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 128), 0, 256)
+    full = tfm.forward(params, cfg, toks)
+    chunked = tfm.forward(params, cfg_c, toks)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_matches_full_local():
+    cfg = _cfg(block_pattern=("local",), local_window=48)
+    cfg_c = dataclasses.replace(cfg, attn_q_chunk=32)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 128), 0, 256)
+    np.testing.assert_allclose(
+        np.asarray(tfm.forward(params, cfg_c, toks)),
+        np.asarray(tfm.forward(params, cfg, toks)),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_grads_match():
+    """The checkpointed chunk body must not change gradients."""
+    cfg = _cfg()
+    cfg_c = dataclasses.replace(cfg, attn_q_chunk=32)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, 64), 0, 256)
+
+    def loss(p, c):
+        return jnp.sum(tfm.forward(p, c, toks) ** 2) * 1e-4
+
+    g1 = jax.grad(lambda p: loss(p, cfg))(params)
+    g2 = jax.grad(lambda p: loss(p, cfg_c))(params)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=5e-3, atol=1e-5), g1, g2)
+
+
+def test_ring_cache_matches_full_cache_local_decode():
+    """Ring-buffer local-attn cache == full-length cache decode, once past
+    the window (the long_500k mechanism)."""
+    cfg = _cfg(block_pattern=("local",), local_window=16,
+               n_kv_heads=1, supports_long_context=True)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    T = 40
+    toks = jax.random.randint(jax.random.key(2), (1, T), 0, 256)
+    # full-length cache (max_len == T keeps the plain path)
+    cache_full = tfm.init_cache(cfg, 1, max_len=T)
+    # ring cache (max_len > window triggers the ring)
+    cache_ring = tfm.init_cache(cfg, 1, max_len=10_000)
+    outs_f, outs_r = [], []
+    for t in range(T):
+        lf, cache_full = tfm.decode_step(params, cfg, toks[:, t:t + 1],
+                                         cache_full)
+        lr, cache_ring = tfm.decode_step(params, cfg, toks[:, t:t + 1],
+                                         cache_ring)
+        outs_f.append(np.asarray(lf))
+        outs_r.append(np.asarray(lr))
+    np.testing.assert_allclose(np.concatenate(outs_r),
+                               np.concatenate(outs_f), rtol=2e-3,
+                               atol=2e-3)
+    # and the ring cache really is O(window)
+    assert cache_ring["scan"][0]["k"].shape[2] == 16
+
+
+def test_ring_cache_matches_forward():
+    """Ring-cache decode reproduces the training-time (forward) logits."""
+    cfg = _cfg(block_pattern=("local",), local_window=16, n_kv_heads=1)
+    params = tfm.init_params(jax.random.key(0), cfg)
+    T = 48
+    toks = jax.random.randint(jax.random.key(3), (1, T), 0, 256)
+    full = tfm.forward(params, cfg, toks)
+    cache = tfm.init_cache(cfg, 1, max_len=10_000)
+    outs = []
+    for t in range(T):
+        l, cache = tfm.decode_step(params, cfg, toks[:, t:t + 1], cache)
+        outs.append(np.asarray(l[:, 0]))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(full),
+                               rtol=2e-2, atol=2e-3)

@@ -1,0 +1,151 @@
+"""Algorithm 3 (pixel-grouped sorting with stage-aware subsampling):
+permutation validity, group ordering, per-group stride retention,
+hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CmaxConfig, retained_window, sort_events,
+                        stage_policy, warp_events)
+from repro.core.types import StageConfig
+from helpers import random_window, small_camera
+
+
+def _stage(scale=0.5, keep=0.5):
+    return StageConfig(scale=scale, tau=1e-3, max_iters=10,
+                       blur_taps=5, blur_sigma=0.75, keep_ratio=keep)
+
+
+def test_perm_is_permutation():
+    ev = random_window(777, seed=0)
+    t = sort_events(ev, jnp.zeros(3), small_camera(), _stage())
+    perm = np.asarray(t.perm)
+    assert sorted(perm.tolist()) == list(range(777))
+
+
+def test_retained_events_group_ordered():
+    """Retained slots come first and are sorted by group id."""
+    ev = random_window(1024, seed=1)
+    t = sort_events(ev, jnp.array([0.3, -0.2, 0.5]), small_camera(), _stage())
+    ret = np.asarray(t.retained)
+    pref = np.asarray(t.p_ref)
+    n_ret = int(t.n_retained)
+    assert ret[:n_ret].all() and not ret[n_ret:].any()
+    gids = pref[:n_ret]
+    assert (np.diff(gids) >= 0).all()
+
+
+def test_group_ids_match_warp():
+    """p_ref of a retained slot equals the warp's p_act for that event."""
+    ev = random_window(512, seed=2)
+    cam = small_camera()
+    om = jnp.array([0.1, 0.4, -0.3])
+    stage = _stage()
+    t = sort_events(ev, om, cam, stage)
+    w = warp_events(ev, om, cam, stage.scale)
+    pact = np.asarray(w.p_act)[np.asarray(t.perm)]
+    ret = np.asarray(t.retained)
+    np.testing.assert_array_equal(np.asarray(t.p_ref)[ret], pact[ret])
+
+
+@pytest.mark.parametrize("keep,stride", [(1.0, 1), (0.5, 2), (0.25, 4)])
+def test_per_group_stride_retention(keep, stride):
+    """Within each group, exactly every stride-th event (by group-local
+    rank) is retained — Alg. 3's group-local subsampling."""
+    ev = random_window(2048, seed=3)
+    cam = small_camera()
+    om = jnp.zeros(3)
+    stage = _stage(keep=keep)
+    t = sort_events(ev, om, cam, stage)
+    cnt = np.asarray(t.cnt)
+    n_ret = int(t.n_retained)
+    exp = np.ceil(cnt / stride).sum()
+    assert n_ret == int(exp)
+
+
+def test_counts_match_histogram():
+    ev = random_window(1024, seed=4)
+    cam = small_camera()
+    om = jnp.array([0.7, 0.1, -0.2])
+    stage = _stage(scale=0.25, keep=0.25)
+    t = sort_events(ev, om, cam, stage)
+    w = warp_events(ev, om, cam, stage.scale)
+    Hs, Ws = cam.grid(stage.scale)
+    pact = np.asarray(w.p_act)
+    hist = np.bincount(pact[pact >= 0], minlength=Hs * Ws)
+    np.testing.assert_array_equal(np.asarray(t.cnt), hist)
+
+
+def test_offsets_are_prefix_sums():
+    ev = random_window(512, seed=5)
+    t = sort_events(ev, jnp.zeros(3), small_camera(), _stage())
+    cnt = np.asarray(t.cnt)
+    off = np.asarray(t.offset)
+    np.testing.assert_array_equal(off[1:len(cnt) + 1] - off[:len(cnt)], cnt)
+
+
+def test_last_in_pg_marks_group_boundaries():
+    ev = random_window(512, seed=6)
+    t = sort_events(ev, jnp.zeros(3), small_camera(), _stage())
+    n_ret = int(t.n_retained)
+    pref = np.asarray(t.p_ref)[:n_ret]
+    last = np.asarray(t.last_in_pg)[:n_ret]
+    # number of last_in_pg flags == number of distinct retained groups
+    assert last.sum() == len(np.unique(pref))
+    # a flag is set exactly where the next group id differs
+    nxt = np.append(pref[1:], -1)
+    np.testing.assert_array_equal(last, pref != nxt)
+
+
+def test_weights_select_retained_in_original_order():
+    ev = random_window(256, seed=7)
+    t = sort_events(ev, jnp.zeros(3), small_camera(), _stage())
+    w = np.asarray(t.weights)
+    perm = np.asarray(t.perm)
+    ret = np.asarray(t.retained)
+    assert set(np.nonzero(w)[0]) == set(perm[ret])
+
+
+def test_retained_window_compacts():
+    ev = random_window(256, seed=8)
+    t = sort_events(ev, jnp.zeros(3), small_camera(), _stage(keep=0.5))
+    rw = retained_window(ev, t)
+    assert int(rw.valid.sum()) == int(t.n_retained)
+    # compacted stream is group-ordered
+    np.testing.assert_array_equal(np.asarray(rw.x),
+                                  np.asarray(ev.x)[np.asarray(t.perm)])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(16, 400), seed=st.integers(0, 1000),
+       keep=st.sampled_from([0.25, 0.5, 1.0]),
+       scale=st.sampled_from([0.25, 0.5, 1.0]))
+def test_sorting_invariants_property(n, seed, keep, scale):
+    """Property: perm is a permutation; retained count == sum of per-group
+    budgets; every retained event is valid+in-range."""
+    ev = random_window(n, seed=seed, valid_frac=0.9)
+    cam = small_camera()
+    om = jnp.array([0.2, -0.1, 0.3])
+    stage = _stage(scale=scale, keep=keep)
+    t = sort_events(ev, om, cam, stage)
+    perm = np.asarray(t.perm)
+    assert sorted(perm.tolist()) == list(range(n))
+    stride = max(1, round(1.0 / keep))
+    cnt = np.asarray(t.cnt)
+    assert int(t.n_retained) == int(np.ceil(cnt / stride).sum())
+    w = warp_events(ev, om, cam, scale)
+    inr = np.asarray(w.in_range)[perm]
+    ret = np.asarray(t.retained)
+    assert inr[ret].all()
+
+
+def test_stage_policy_budgets():
+    cnt = jnp.array([0, 1, 2, 3, 4, 7, 8, 100])
+    pol = stage_policy(cnt, keep_ratio=0.25)
+    np.testing.assert_array_equal(np.asarray(pol.stride), 4)
+    np.testing.assert_array_equal(np.asarray(pol.budget),
+                                  [0, 1, 1, 1, 1, 2, 2, 25])
+    np.testing.assert_array_equal(np.asarray(pol.act), cnt > 0)
+    capped = stage_policy(cnt, keep_ratio=1.0, max_per_group=10)
+    assert int(capped.budget[-1]) == 10
