@@ -16,16 +16,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "accuracy", "convergence", "locality",
-                             "energy", "kernels"])
+                             "energy", "kernels", "serving"])
     args = ap.parse_args()
 
-    from . import accuracy, convergence, energy_latency, kernels, locality
+    from . import (accuracy, convergence, energy_latency, kernels, locality,
+                   serving)
     suites = {
         "accuracy": accuracy.run,          # paper Table 1 + Fig. 3
         "convergence": convergence.run,    # paper Fig. 2
         "locality": locality.run,          # paper Tables 2-3
         "energy": energy_latency.run,      # paper Table 6 + §5.2
         "kernels": kernels.run,            # Pallas kernels + tile hillclimb
+        "serving": serving.run,            # batched service throughput
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -1,0 +1,107 @@
+"""Serving-path benchmark: throughput (windows/sec) and padding overhead
+of the batched estimation service (launch/serve.py) across bucket
+policies, plus a batched-vs-per-window numerical equivalence check.
+
+The comparison mirrors the serving design trade-off (DESIGN.md §4): fine
+length classes (pow2) recompile more but pad less; a single length class
+compiles once and pads everything to the maximum window.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .common import emit
+from repro.core import CmaxConfig, estimate_window
+from repro.data import events as ev_data
+from repro.launch.serve import BatchedEstimationService
+
+N_STREAMS = 4
+N_WINDOWS = 4
+MIN_EVENTS, MAX_EVENTS = 1200, 4096
+
+
+def _workload(cam) -> Dict[str, Tuple[List, np.ndarray]]:
+    """S ragged streams with ground truth: {stream: ([windows], omega_true)}."""
+    out = {}
+    for s in range(N_STREAMS):
+        spec = ev_data.SequenceSpec(
+            name=f"s{s}", n_windows=N_WINDOWS, events_per_window=MAX_EVENTS,
+            seed=300 + s, camera=cam, omega_scale=3.0, window_dt=0.02)
+        wins, om_true, _ = ev_data.make_sequence(spec)
+        lens = ev_data.ragged_lengths(N_WINDOWS, MIN_EVENTS, MAX_EVENTS,
+                                      seed=s)
+        out[f"s{s}"] = (ev_data.ragged_from_sequence(wins, lens),
+                        np.asarray(om_true))
+    return out
+
+
+def _submit_all(svc, workload) -> int:
+    n = 0
+    for sid, (ragged, _) in workload.items():
+        for w in ragged:
+            svc.submit(sid, w)
+            n += 1
+    return n
+
+
+def run() -> dict:
+    cfg = CmaxConfig()
+    cam = cfg.camera
+    workload = _workload(cam)
+    policies = {
+        "pow2": ev_data.pow2_policy(min_bucket=1024),
+        "single": ev_data.single_policy(MAX_EVENTS),
+    }
+
+    results = {}
+    responses_by_policy = {}
+    for pname, policy in policies.items():
+        svc = BatchedEstimationService(cfg, policy=policy, max_batch=4)
+        # cold pass: includes every compile the policy's classes need
+        n = _submit_all(svc, workload)
+        t0 = time.perf_counter()
+        responses = svc.drain()
+        cold = time.perf_counter() - t0
+        # warm pass: same shapes, executables cached — steady-state rate
+        svc._warm.clear()
+        _submit_all(svc, workload)
+        t0 = time.perf_counter()
+        warm_responses = svc.drain()
+        warm = time.perf_counter() - t0
+        assert len(responses) == len(warm_responses) == n
+
+        wps_cold = n / cold
+        wps_warm = n / warm
+        emit(f"serving_{pname}_throughput", 1e6 * warm / n,
+             f"windows_per_s={wps_warm:.2f};cold={wps_cold:.2f};"
+             f"compiles={svc.stats['compiles']}")
+        emit(f"serving_{pname}_padding", 0.0,
+             f"padded_slot_frac={svc.padded_slot_frac:.3f};"
+             f"batches={svc.stats['batches']}")
+        results[pname] = dict(windows_per_s=wps_warm,
+                              padded_slot_frac=svc.padded_slot_frac,
+                              compiles=svc.stats["compiles"])
+        responses_by_policy[pname] = responses
+
+    # equivalence: the batched service must reproduce the per-window
+    # warm-start chain of `estimate_window` to numerical tolerance
+    policy = policies["pow2"]
+    worst = 0.0
+    for sid, (ragged, _) in workload.items():
+        om = np.zeros(3, np.float32)
+        for k, w in enumerate(ragged):
+            ref = estimate_window(
+                ev_data.pad_window(w, policy.bucket_of(w.n)),
+                jnp.asarray(om), cfg)
+            om = np.asarray(ref.omega)
+            got = [r for r in responses_by_policy["pow2"]
+                   if r.stream_id == sid and r.seq == k][0]
+            worst = max(worst, float(np.abs(got.omega - om).max()))
+    assert worst < 1e-4, f"batched deviates from per-window by {worst}"
+    emit("serving_equivalence", 0.0, f"max_abs_dev={worst:.2e}")
+    results["max_abs_dev"] = worst
+    return results

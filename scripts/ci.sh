@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification, as run by .github/workflows/ci.yml: install the
+# manifest dependencies and run the test suite on CPU (the Pallas kernels
+# execute with interpret=True there). Falls back to preinstalled deps in
+# hermetic/offline containers; tests/conftest.py shims `hypothesis` if the
+# dev extras could not be installed.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -e ".[dev]" \
+    || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q

@@ -10,7 +10,8 @@ from .contrast import (blur_separable, gaussian_taps, objective_direct,
 from .sorting import SortTables, retained_window, sort_events, stage_policy
 from .adaptive import GainThresholdController, gain, should_stay
 from . import cgpr, energy
-from .pipeline import (WindowResult, estimate_sequence, estimate_window,
+from .pipeline import (WindowResult, estimate_batch, estimate_sequence,
+                       estimate_streams, estimate_window,
                        estimate_windows_parallel, make_engine_pass)
 
 __all__ = [
@@ -23,6 +24,7 @@ __all__ = [
     "SortTables", "retained_window", "sort_events", "stage_policy",
     "GainThresholdController", "gain", "should_stay",
     "cgpr", "energy",
-    "WindowResult", "estimate_sequence", "estimate_window",
-    "estimate_windows_parallel", "make_engine_pass",
+    "WindowResult", "estimate_batch", "estimate_sequence",
+    "estimate_streams", "estimate_window", "estimate_windows_parallel",
+    "make_engine_pass",
 ]

@@ -190,3 +190,39 @@ def estimate_windows_parallel(windows: EventWindow, omega0s: jax.Array,
     return jax.vmap(lambda x, y, t, p, v, o: estimate_window(
         EventWindow(x, y, t, p, v), o, cfg))(
         windows.x, windows.y, windows.t, windows.p, windows.valid, omega0s)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def estimate_batch(windows: EventWindow, omega0s: jax.Array,
+                   cfg: CmaxConfig) -> WindowResult:
+    """Batched estimation of B independent windows — the serving hot path.
+
+    `windows` arrays have shape (B, N) with padded slots carrying
+    valid=False; `omega0s` is (B, 3) of per-window warm starts. One compiled
+    executable exists per (B, N, cfg) triple — the serving layer
+    (launch/serve.py) bounds that set by bucketing N and B into length
+    classes (DESIGN.md §4). The per-window adaptive while_loops run in
+    masked lockstep under vmap: a window that saturates early contributes
+    masked no-ops until the slowest window in the batch finishes (the SIMT
+    analog of the controller's clock gating; per-window true iteration
+    counts survive in the returned traces).
+    """
+    return estimate_windows_parallel(windows, omega0s, cfg)
+
+
+def estimate_streams(windows: EventWindow, omega_inits: jax.Array,
+                     cfg: CmaxConfig) -> Tuple[jax.Array, WindowResult]:
+    """Warm-start-chained estimation of S independent streams.
+
+    `windows` arrays have shape (S, K, N): S concurrent streams of K
+    windows each; `omega_inits` is (S, 3). Within each stream the windows
+    are processed sequentially with warm-start chaining (scan); across
+    streams everything is batched (vmap) — so this composes the accuracy
+    of `estimate_sequence` with the throughput of `estimate_batch`.
+    Returns (omegas (S, K, 3), stacked traces).
+    """
+    def one_stream(x, y, t, p, v, omega0):
+        return estimate_sequence(EventWindow(x, y, t, p, v), omega0, cfg)
+
+    return jax.vmap(one_stream)(windows.x, windows.y, windows.t, windows.p,
+                                windows.valid, omega_inits)

@@ -19,7 +19,7 @@ high event rate) and `boxes` (sparser structure).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -139,3 +139,160 @@ def make_sequence(spec: SequenceSpec
 def window_slice(windows: EventWindow, k: int) -> EventWindow:
     return EventWindow(x=windows.x[k], y=windows.y[k], t=windows.t[k],
                        p=windows.p[k], valid=windows.valid[k])
+
+
+# ---------------------------------------------------------------------------
+# Ragged-window batching layer (DESIGN.md §4).
+#
+# Real event streams produce windows of wildly different event counts (the
+# "input-dependent computation" CMAX-CAMEL is built around), but every
+# distinct array length is a distinct XLA executable. Bucketing pads each
+# window up to one of a small set of length classes so the number of compiled
+# executables is bounded by the policy, not by the workload. Padded slots
+# carry valid=False and contribute nothing anywhere downstream (warp marks
+# them out-of-range, sorting dumps them in the overflow bucket, IWE weights
+# are zero).
+# ---------------------------------------------------------------------------
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Maps a raw event count to a padded length class.
+
+    ``sizes=()`` selects power-of-two buckets in [min_bucket, max_bucket]
+    (geometric classes: worst-case padding < 2x, #executables is
+    log2(max/min)+1). A non-empty ``sizes`` tuple gives explicit classes —
+    a single entry pads everything to one length (one executable, maximal
+    padding), which is the "no bucketing" baseline the serving benchmark
+    compares against.
+    """
+
+    name: str = "pow2"
+    sizes: Tuple[int, ...] = ()
+    min_bucket: int = 1024
+    max_bucket: int = 1 << 20
+
+    def bucket_of(self, n: int) -> int:
+        """Smallest length class holding an n-event window."""
+        if n <= 0:
+            raise ValueError(f"window must have at least 1 event, got {n}")
+        if self.sizes:
+            for s in sorted(self.sizes):
+                if n <= s:
+                    return int(s)
+            raise ValueError(
+                f"window of {n} events exceeds largest bucket "
+                f"{max(self.sizes)} of policy {self.name!r}")
+        if n > self.max_bucket:
+            raise ValueError(
+                f"window of {n} events exceeds max_bucket={self.max_bucket}")
+        return min(self.max_bucket, max(self.min_bucket, _next_pow2(n)))
+
+
+def pow2_policy(min_bucket: int = 1024,
+                max_bucket: int = 1 << 20) -> BucketPolicy:
+    return BucketPolicy(name="pow2", min_bucket=min_bucket,
+                        max_bucket=max_bucket)
+
+
+def single_policy(size: int) -> BucketPolicy:
+    """Everything pads to one fixed length — the unbucketed baseline."""
+    return BucketPolicy(name=f"single{size}", sizes=(int(size),))
+
+
+def fixed_policy(sizes: Sequence[int]) -> BucketPolicy:
+    sz = tuple(sorted(int(s) for s in sizes))
+    return BucketPolicy(name="fixed" + "-".join(map(str, sz)), sizes=sz)
+
+
+def pad_window(ev: EventWindow, n_pad: int) -> EventWindow:
+    """Pad a single (N,) window to (n_pad,) with valid=False slots.
+
+    Pad coordinates are zeros: `warp_events` already gates on `ev.valid`,
+    `sort_events` routes invalid events to the dump bucket, and IWE weights
+    are zero for non-retained events, so the pad values are never read.
+    """
+    n = ev.n
+    if n > n_pad:
+        raise ValueError(f"cannot pad window of {n} events to {n_pad}")
+    if n == n_pad:
+        return ev
+    pad = ((0, n_pad - n),)
+    return EventWindow(
+        x=jnp.pad(ev.x, pad), y=jnp.pad(ev.y, pad),
+        t=jnp.pad(ev.t, pad), p=jnp.pad(ev.p, pad),
+        valid=jnp.pad(ev.valid, pad, constant_values=False))
+
+
+def batch_windows(wins: Sequence[EventWindow],
+                  n_pad: int = None) -> EventWindow:
+    """Stack variable-length windows into one (B, n_pad) padded batch."""
+    if not wins:
+        raise ValueError("batch_windows needs at least one window")
+    if n_pad is None:
+        n_pad = max(w.n for w in wins)
+    padded = [pad_window(w, n_pad) for w in wins]
+    stack = lambda f: jnp.stack([f(w) for w in padded])
+    return EventWindow(x=stack(lambda w: w.x), y=stack(lambda w: w.y),
+                       t=stack(lambda w: w.t), p=stack(lambda w: w.p),
+                       valid=stack(lambda w: w.valid))
+
+
+def bucketize(wins: Sequence[EventWindow], policy: BucketPolicy
+              ) -> Dict[int, List[int]]:
+    """Group window indices by length class: {bucket_n: [indices]}.
+
+    Bucketing is by array length (`ev.n`) — the quantity that determines
+    the compiled executable — not by the number of valid events.
+    """
+    out: Dict[int, List[int]] = {}
+    for i, w in enumerate(wins):
+        out.setdefault(policy.bucket_of(w.n), []).append(i)
+    return {k: out[k] for k in sorted(out)}
+
+
+def padding_overhead(wins: Sequence[EventWindow],
+                     policy: BucketPolicy) -> float:
+    """Fraction of padded event slots the policy adds: pad / (raw + pad)."""
+    raw = sum(w.n for w in wins)
+    total = sum(policy.bucket_of(w.n) for w in wins)
+    return float(total - raw) / float(max(total, 1))
+
+
+def ragged_from_sequence(windows: EventWindow, lengths: Sequence[int]
+                         ) -> List[EventWindow]:
+    """Cut a dense (K, N) sequence into variable-length windows.
+
+    Events within a window are time-ordered, so taking the first L_k slots
+    keeps a causally-contiguous prefix — the shape a streaming source
+    produces when windows are closed early (by event count, not time).
+    """
+    K = windows.x.shape[0]
+    if len(lengths) != K:
+        raise ValueError(f"got {len(lengths)} lengths for {K} windows")
+    out = []
+    for k, L in enumerate(lengths):
+        w = window_slice(windows, k)
+        L = int(L)
+        if not (0 < L <= w.n):
+            raise ValueError(f"length {L} out of range (1, {w.n}] at {k}")
+        out.append(EventWindow(x=w.x[:L], y=w.y[:L], t=w.t[:L], p=w.p[:L],
+                               valid=w.valid[:L]))
+    return out
+
+
+def ragged_lengths(n_windows: int, n_min: int, n_max: int,
+                   seed: int = 0) -> np.ndarray:
+    """Heavy-tailed window lengths (log-uniform), as DVS bursts are."""
+    if not (1 <= n_min <= n_max):
+        raise ValueError(
+            f"need 1 <= n_min <= n_max, got n_min={n_min} n_max={n_max}")
+    rng = np.random.default_rng(seed)
+    lo, hi = np.log(n_min), np.log(n_max)
+    raw = np.exp(rng.uniform(lo, hi, n_windows)).astype(np.int64)
+    # int truncation can land one below n_min; enforce the contract
+    return np.clip(raw, n_min, n_max)

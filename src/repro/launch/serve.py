@@ -1,22 +1,301 @@
-"""Serving launcher: prefill + batched decode demo on the reduced configs.
+"""Serving launchers: the CMAX batched estimation service + the LM demo.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+The primary entry point is the high-throughput batched estimation service
+(DESIGN.md §4): a request queue of variable-length event windows is
+drained into padded, bucketed batches and pushed through the jitted
+coarse-to-fine adaptive pipeline, with warm-start chaining per stream and
+an explicit executable cache keyed on (bucket size, batch class, config).
+
+    # batched CMAX estimation over synthetic ragged streams
+    PYTHONPATH=src python -m repro.launch.serve cmax \
+        --streams 4 --windows 4 --policy pow2
+
+    # the original LM prefill + batched decode demo
+    PYTHONPATH=src python -m repro.launch.serve lm --arch llama3.2-1b \
         --batch 4 --prompt-len 16 --gen 24
+
+Library use (see examples/serve_batch.py for a runnable version):
+
+    from repro.launch.serve import BatchedEstimationService
+    from repro.data import events as ev
+
+    svc = BatchedEstimationService(cfg, policy=ev.pow2_policy(512))
+    svc.submit("cam0", window_a)        # 1-D EventWindow, any length
+    svc.submit("cam1", window_b)
+    for resp in svc.drain():            # list of WindowResponse
+        print(resp.stream_id, resp.seq, resp.omega)
+
+Design notes:
+
+  * Bucketing bounds recompilation. Every distinct (batch, events) shape
+    is a distinct XLA executable; the service pads event counts to the
+    policy's length classes and batch sizes to power-of-two classes, so
+    the executable count is O(#length classes x log2(max_batch)) — set by
+    configuration, never by the workload.
+  * Per-stream ordering. Windows of one stream are estimated in order
+    (warm-start chaining needs the previous result), so one batch admits
+    at most one window per stream. Concurrency comes from many streams,
+    which is exactly the fleet-scale serving shape.
+  * Batch fill. A partially full batch class is filled by replicating the
+    batch leader; fill slots cost compute but are discarded, and the
+    `padded_slot_frac` stat reports both event- and batch-padding so
+    policies can be compared (benchmarks/serving.py).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
-    args = ap.parse_args(argv)
+@dataclasses.dataclass(frozen=True)
+class WindowRequest:
+    """One queued estimation request: a single variable-length window."""
+    stream_id: str
+    seq: int                 # per-stream sequence number (assigned by submit)
+    window: object           # 1-D EventWindow
+    bucket_n: int            # length class (computed once at submit)
+    omega_hint: Optional[np.ndarray] = None   # overrides the warm start
 
+
+@dataclasses.dataclass(frozen=True)
+class WindowResponse:
+    stream_id: str
+    seq: int
+    omega: np.ndarray        # (3,) estimate
+    iters: Tuple[int, ...]   # adaptive iterations per stage
+    bucket_n: int            # event-length class the request ran in
+    batch_b: int             # batch class the request ran in
+
+
+class BatchedEstimationService:
+    """Queue -> bucketed batch -> jitted adaptive pipeline -> responses.
+
+    Parameters:
+      cfg: CmaxConfig (static; part of every executable-cache key).
+      policy: events.BucketPolicy mapping raw event counts to length
+        classes (default: power-of-two buckets from 512).
+      max_batch: largest batch class; smaller batches pad to the next
+        power of two.
+      mesh: optional jax mesh — when given, batches run through
+        `core.distributed.estimate_batch_sharded` (batch classes are then
+        kept divisible by the mesh's DP extent).
+    """
+
+    def __init__(self, cfg, policy=None, max_batch: int = 8, mesh=None):
+        from repro.data import events as ev_data
+        self.cfg = cfg
+        self.policy = policy or ev_data.pow2_policy(min_bucket=512)
+        self.max_batch = int(max_batch)
+        self.mesh = mesh
+        self._queue: Deque[WindowRequest] = deque()
+        self._seq: Dict[str, int] = {}
+        self._warm: Dict[str, np.ndarray] = {}
+        self._cache: Dict[Tuple[int, int], object] = {}
+        self.stats = {"windows": 0, "batches": 0, "compiles": 0,
+                      "event_slots": 0, "raw_events": 0, "fill_slots": 0}
+
+    # -- request side ------------------------------------------------------
+
+    def submit(self, stream_id: str, window, omega_hint=None) -> int:
+        """Enqueue one window for `stream_id`; returns its sequence number.
+
+        Windows of one stream must be submitted in time order; they are
+        estimated in that order with warm-start chaining.
+        """
+        # bucketing at submit time rejects unservable sizes immediately —
+        # a poison request must never sit in the queue
+        bucket_n = self.policy.bucket_of(window.n)
+        seq = self._seq.get(stream_id, 0)
+        self._seq[stream_id] = seq + 1
+        hint = None if omega_hint is None else np.asarray(omega_hint,
+                                                         np.float32)
+        self._queue.append(
+            WindowRequest(stream_id, seq, window, bucket_n, hint))
+        return seq
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- executable cache --------------------------------------------------
+
+    def _executable(self, bucket_n: int, batch_b: int):
+        """The compiled batch function for one (length, batch) class."""
+        from repro.core.pipeline import estimate_batch
+
+        key = (bucket_n, batch_b)
+        fn = self._cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            if self.mesh is not None:
+                from repro.core.distributed import estimate_batch_sharded
+                mesh = self.mesh
+                fn = lambda w, o: estimate_batch_sharded(w, o, cfg, mesh)
+            else:
+                # estimate_batch is module-level jitted with static cfg,
+                # so executables are shared across service instances; the
+                # per-key entry (and the compile counter) only tracks
+                # which shape classes THIS service has needed.
+                fn = lambda w, o: estimate_batch(w, o, cfg)
+            self._cache[key] = fn
+            self.stats["compiles"] += 1
+        return fn
+
+    def _batch_class(self, b: int) -> int:
+        from repro.data.events import _next_pow2
+        cls = min(self.max_batch, _next_pow2(b))
+        if self.mesh is not None:
+            from repro.core.distributed import _dp_extent
+            ndev = _dp_extent(self.mesh)
+            cls = max(cls, ndev)
+            cls += (-cls) % ndev
+        return cls
+
+    # -- batch formation + execution ---------------------------------------
+
+    def _collect(self) -> List[WindowRequest]:
+        """FIFO batch formation: the oldest request leads, and compatible
+        requests (same length class, stream not yet seen in this scan)
+        join up to max_batch. Only a stream's OLDEST pending request is
+        admissible — once any request of a stream is passed over, its
+        later windows must wait for the next batch, or warm-start
+        chaining would run a stream out of order. Skipped requests stay
+        queued in order."""
+        if not self._queue:
+            return []
+        bucket = self._queue[0].bucket_n
+        admitted: List[WindowRequest] = []
+        seen = set()
+        keep: Deque[WindowRequest] = deque()
+        while self._queue:
+            req = self._queue.popleft()
+            if (req.stream_id not in seen and req.bucket_n == bucket):
+                admitted.append(req)
+                if len(admitted) == self.max_batch:
+                    break   # full: the unscanned tail stays put
+            else:
+                keep.append(req)
+            seen.add(req.stream_id)
+        keep.extend(self._queue)
+        self._queue = keep
+        return admitted
+
+    def step(self) -> List[WindowResponse]:
+        """Drain ONE batch from the queue and return its responses
+        (empty list if the queue is empty)."""
+        import jax
+        import jax.numpy as jnp
+        from repro.data import events as ev_data
+
+        batch = self._collect()
+        if not batch:
+            return []
+        bucket_n = batch[0].bucket_n
+        batch_b = self._batch_class(len(batch))
+
+        wins = [req.window for req in batch]
+        omega0 = [req.omega_hint if req.omega_hint is not None
+                  else self._warm.get(req.stream_id, np.zeros(3, np.float32))
+                  for req in batch]
+        n_fill = batch_b - len(batch)
+        # fill slots replicate the leader (finite data, results discarded)
+        wins += [batch[0].window] * n_fill
+        omega0 += [omega0[0]] * n_fill
+
+        ev_batch = ev_data.batch_windows(wins, bucket_n)
+        om_batch = jnp.asarray(np.stack(omega0))
+        fn = self._executable(bucket_n, batch_b)
+        res = jax.block_until_ready(fn(ev_batch, om_batch))
+
+        omegas = np.asarray(res.omega)
+        iters = [np.asarray(tr.iters) for tr in res.stages]
+        out = []
+        for i, req in enumerate(batch):
+            om = omegas[i]
+            self._warm[req.stream_id] = om
+            out.append(WindowResponse(
+                stream_id=req.stream_id, seq=req.seq, omega=om,
+                iters=tuple(int(it[i]) for it in iters),
+                bucket_n=bucket_n, batch_b=batch_b))
+
+        self.stats["windows"] += len(batch)
+        self.stats["batches"] += 1
+        self.stats["event_slots"] += bucket_n * batch_b
+        self.stats["raw_events"] += sum(w.n for w in wins[:len(batch)])
+        self.stats["fill_slots"] += n_fill
+        return out
+
+    def drain(self) -> List[WindowResponse]:
+        """Run `step` until the queue is empty; responses in batch order."""
+        out: List[WindowResponse] = []
+        while self._queue:
+            out.extend(self.step())
+        return out
+
+    @property
+    def padded_slot_frac(self) -> float:
+        """Fraction of event slots that were padding (event-length padding
+        + batch-fill replication), over everything served so far."""
+        total = self.stats["event_slots"]
+        return (total - self.stats["raw_events"]) / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# CLI demos
+# ---------------------------------------------------------------------------
+
+
+def _run_cmax(args) -> None:
+    from repro.core import CmaxConfig
+    from repro.data import events as ev_data
+
+    cfg = CmaxConfig()
+    cam = cfg.camera
+    if args.policy == "pow2":
+        policy = ev_data.pow2_policy(min_bucket=args.min_bucket)
+    else:
+        policy = ev_data.single_policy(args.max_events)
+
+    svc = BatchedEstimationService(cfg, policy=policy,
+                                   max_batch=args.max_batch)
+
+    # synthetic ragged workload: S streams x K windows, log-uniform lengths
+    truth = {}
+    for s in range(args.streams):
+        spec = ev_data.SequenceSpec(
+            name=f"s{s}", n_windows=args.windows,
+            events_per_window=args.max_events, seed=100 + s, camera=cam,
+            omega_scale=3.0, window_dt=0.02)
+        wins, om_true, _ = ev_data.make_sequence(spec)
+        lens = ev_data.ragged_lengths(args.windows, args.min_events,
+                                      args.max_events, seed=s)
+        ragged = ev_data.ragged_from_sequence(wins, lens)
+        truth[f"s{s}"] = np.asarray(om_true)
+        for k, w in enumerate(ragged):
+            svc.submit(f"s{s}", w,
+                       omega_hint=np.asarray(om_true[0]) if k == 0 else None)
+
+    n_req = svc.pending()
+    t0 = time.perf_counter()
+    responses = svc.drain()
+    dt = time.perf_counter() - t0
+
+    errs = [float(np.linalg.norm(r.omega - truth[r.stream_id][r.seq]))
+            for r in responses]
+    print(f"served {len(responses)}/{n_req} windows in {dt:.2f}s "
+          f"({len(responses) / dt:.2f} windows/s incl compile)")
+    print(f"batches={svc.stats['batches']} compiles={svc.stats['compiles']} "
+          f"padded_slot_frac={svc.padded_slot_frac:.3f} "
+          f"policy={svc.policy.name}")
+    print(f"rmse vs ground truth: "
+          f"{float(np.sqrt(np.mean(np.square(errs)))):.4f} rad/s")
+
+
+def _run_lm(args) -> None:
     import jax
     import jax.numpy as jnp
     from repro.configs import get_smoke_config
@@ -61,6 +340,32 @@ def main(argv=None):
           f"{dt:.2f}s ({1e3 * dt / total:.1f} ms/step incl first-call "
           f"compile)")
     print("generated token ids (req 0):", toks[0].tolist())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    cm = sub.add_parser("cmax", help="batched CMAX estimation service demo")
+    cm.add_argument("--streams", type=int, default=4)
+    cm.add_argument("--windows", type=int, default=4)
+    cm.add_argument("--min-events", type=int, default=1024)
+    cm.add_argument("--max-events", type=int, default=4096)
+    cm.add_argument("--min-bucket", type=int, default=1024)
+    cm.add_argument("--max-batch", type=int, default=8)
+    cm.add_argument("--policy", choices=["pow2", "single"], default="pow2")
+
+    lm = sub.add_parser("lm", help="LM prefill + batched decode demo")
+    lm.add_argument("--arch", required=True)
+    lm.add_argument("--batch", type=int, default=4)
+    lm.add_argument("--prompt-len", type=int, default=16)
+    lm.add_argument("--gen", type=int, default=24)
+
+    args = ap.parse_args(argv)
+    if args.mode == "cmax":
+        _run_cmax(args)
+    else:
+        _run_lm(args)
 
 
 if __name__ == "__main__":

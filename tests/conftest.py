@@ -1,5 +1,6 @@
 import os
 import sys
+import types
 
 # src-layout import without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -7,3 +8,75 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+
+def _install_hypothesis_fallback():
+    """Deterministic stand-in for `hypothesis` when it is not installed.
+
+    `hypothesis` is a declared dev dependency (pyproject.toml), but some
+    environments (including the hermetic CI container) cannot install it.
+    This shim implements exactly the subset the suite uses — @given /
+    @settings and the integers / floats / sampled_from / booleans
+    strategies — by running each property test on a fixed number of
+    seeded pseudo-random examples. No shrinking, no database; with the
+    real library installed this shim is never touched.
+    """
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(lo, hi):
+        return _Strategy(lambda r: r.randint(lo, hi))
+
+    def floats(lo, hi, **_kw):
+        return _Strategy(lambda r: r.uniform(lo, hi))
+
+    def sampled_from(seq):
+        elems = list(seq)
+        return _Strategy(lambda r: elems[r.randrange(len(elems))])
+
+    def booleans():
+        return sampled_from([False, True])
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            def runner():
+                n = getattr(runner, "_max_examples", 10)
+                rng = random.Random(1234)
+                for _ in range(n):
+                    args = [s.draw(rng) for s in arg_strats]
+                    kwargs = {k: s.draw(rng) for k, s in kw_strats.items()}
+                    fn(*args, **kwargs)
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner._max_examples = getattr(fn, "_max_examples", 10)
+            return runner
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.sampled_from = sampled_from
+    strategies.booleans = booleans
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()
