@@ -1,6 +1,7 @@
-"""Batched estimation service in ~30 lines: submit ragged windows from
-several concurrent event streams, drain bucketed batches, read back
-per-stream warm-started estimates (DESIGN.md §4).
+"""Async continuous-batching estimation service in ~40 lines: submit
+ragged windows from several concurrent event streams — with priorities
+and per-request deadlines — poll while batches are in flight, read back
+per-stream warm-started estimates (DESIGN.md §Serving).
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -11,16 +12,21 @@ import numpy as np
 
 from repro.core import CmaxConfig
 from repro.data import events as ev
-from repro.launch.serve import BatchedEstimationService
+from repro.launch.serve import AsyncBatchedEstimationService
 
-# 1) a service: pow2 length buckets from 1024 events, batches up to 4
+# 1) a service: pow2 length buckets from 1024 events, batches up to 4,
+#    up to 2 batches in flight (one computing + one queued)
 cfg = CmaxConfig()
-svc = BatchedEstimationService(cfg, policy=ev.pow2_policy(min_bucket=1024),
-                               max_batch=4)
+svc = AsyncBatchedEstimationService(
+    cfg, policy=ev.pow2_policy(min_bucket=1024), max_batch=4,
+    max_in_flight=2)
 
 # 2) submit 3 windows from each of 4 synthetic camera streams, with
-#    variable event counts (what a real DVS front-end produces)
+#    variable event counts (what a real DVS front-end produces).
+#    Admission is non-blocking: batches dispatch and compute while we
+#    are still submitting — poll() harvests whatever has finished.
 truth = {}
+responses = []
 for s in range(4):
     spec = ev.SequenceSpec(name=f"cam{s}", n_windows=3,
                            events_per_window=4096, seed=40 + s)
@@ -29,17 +35,24 @@ for s in range(4):
     lens = ev.ragged_lengths(3, 1500, 4096, seed=s)
     for k, w in enumerate(ev.ragged_from_sequence(wins, lens)):
         # first window of a stream gets an IMU-style hint; later windows
-        # warm-start from the previous estimate automatically
+        # warm-start from the previous estimate automatically. cam0 is a
+        # high-priority stream; every window carries a deadline (a request
+        # still queued past it is shed, not computed — generous here so
+        # the demo survives first-run XLA compiles of each shape class).
         hint = truth[f"cam{s}"][0] if k == 0 else None
-        svc.submit(f"cam{s}", w, omega_hint=hint)
+        svc.submit(f"cam{s}", w, omega_hint=hint,
+                   priority=1 if s == 0 else 0,
+                   deadline=svc.clock.now() + 120.0)
+    responses.extend(svc.poll())          # overlap admission + compute
 
-# 3) drain the queue and report
-responses = svc.drain()
-print("stream  seq  bucket  batch   |est|     err(rad/s)  iters/stage")
+# 3) drain what is still queued or in flight, and report
+responses.extend(svc.drain())
+print("stream  seq  status  bucket  batch   |est|     err(rad/s)  latency")
 for r in responses:
     err = float(np.linalg.norm(r.omega - truth[r.stream_id][r.seq]))
-    print(f"{r.stream_id:>6} {r.seq:4d} {r.bucket_n:7d} {r.batch_b:6d}"
-          f"   {np.linalg.norm(r.omega):6.3f}   {err:9.4f}    {r.iters}")
+    print(f"{r.stream_id:>6} {r.seq:4d} {r.status:>7} {r.bucket_n:7d}"
+          f" {r.batch_b:6d}   {np.linalg.norm(r.omega):6.3f}"
+          f"   {err:9.4f}   {1e3 * r.latency:6.1f}ms")
 print(f"\n{svc.stats['windows']} windows in {svc.stats['batches']} batches, "
-      f"{svc.stats['compiles']} executables, "
+      f"{svc.stats['compiles']} executables, {svc.stats['shed']} shed, "
       f"padded slot fraction {svc.padded_slot_frac:.3f}")

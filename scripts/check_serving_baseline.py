@@ -1,0 +1,44 @@
+#!/usr/bin/env python
+"""Gate a fresh BENCH_serving.json against the checked-in baseline.
+
+    python scripts/check_serving_baseline.py BENCH_serving.json \
+        artifacts/BENCH_serving.json
+
+Fails (exit 1) if batched-vs-sequential equivalence broke or the async
+drain throughput regressed more than 20% below the recorded baseline.
+The benchmark itself also asserts equivalence at run time; this check
+re-reads it from the artifact so a stale/corrupt artifact fails loudly.
+"""
+import json
+import sys
+
+EQUIV_TOL = 1e-4
+REGRESSION_FLOOR = 0.8     # new throughput must be >= 80% of baseline
+
+
+def main(baseline_path: str, artifact_path: str) -> None:
+    with open(baseline_path) as f:
+        base = json.load(f)["drain"]
+    with open(artifact_path) as f:
+        new = json.load(f)["drain"]
+
+    if new["max_abs_dev"] >= EQUIV_TOL:
+        sys.exit("serving gate: batched-vs-sequential equivalence broken "
+                 f"(max_abs_dev={new['max_abs_dev']:.2e} >= {EQUIV_TOL})")
+    floor = REGRESSION_FLOOR * base["async_windows_per_s"]
+    if new["async_windows_per_s"] < floor:
+        sys.exit("serving gate: throughput regression — async drain "
+                 f"{new['async_windows_per_s']:.2f} windows/s < "
+                 f"{100 * REGRESSION_FLOOR:.0f}% of baseline "
+                 f"{base['async_windows_per_s']:.2f}")
+    print("serving gate ok: "
+          f"async {new['async_windows_per_s']:.2f} windows/s "
+          f"(baseline {base['async_windows_per_s']:.2f}), "
+          f"speedup over sync {new['speedup']:.3f}x, "
+          f"max_abs_dev {new['max_abs_dev']:.2e}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    main(sys.argv[1], sys.argv[2])

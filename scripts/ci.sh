@@ -1,13 +1,30 @@
 #!/usr/bin/env bash
 # Tier-1 verification, as run by .github/workflows/ci.yml: install the
-# manifest dependencies and run the test suite on CPU (the Pallas kernels
-# execute with interpret=True there). Falls back to preinstalled deps in
-# hermetic/offline containers; tests/conftest.py shims `hypothesis` if the
-# dev extras could not be installed.
+# manifest dependencies, run the test suite on CPU (the Pallas kernels
+# execute with interpret=True there), then run the serving load generator
+# in smoke mode and gate on the recorded baseline. Falls back to
+# preinstalled deps in hermetic/offline containers; tests/conftest.py
+# shims `hypothesis` if the dev extras could not be installed.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -e ".[dev]" \
     || echo "ci.sh: pip install failed (offline?); using preinstalled deps"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q --durations=10
+
+# Serving load generator, smoke mode: real drain race (async vs sync, with
+# the batched-vs-sequential equivalence assertion inside) + virtual-time
+# Poisson sweep. Writes the artifact next to the checked-in baseline so
+# the two can be diffed, then gates:
+#   - equivalence: benchmarks/serving.py asserts max_abs_dev < 1e-4 and
+#     exits non-zero on violation (caught by set -e above);
+#   - throughput: async drain windows/sec must stay within 20% of the
+#     checked-in BENCH_serving.json baseline.
+mkdir -p artifacts
+BENCH_SERVING_OUT=artifacts/BENCH_serving.json \
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only serving
+
+python scripts/check_serving_baseline.py \
+    BENCH_serving.json artifacts/BENCH_serving.json

@@ -10,8 +10,8 @@ from .contrast import (blur_separable, gaussian_taps, objective_direct,
 from .sorting import SortTables, retained_window, sort_events, stage_policy
 from .adaptive import GainThresholdController, gain, should_stay
 from . import cgpr, energy
-from .pipeline import (WindowResult, estimate_batch, estimate_sequence,
-                       estimate_streams, estimate_window,
+from .pipeline import (WindowResult, estimate_batch, estimate_batch_donated,
+                       estimate_sequence, estimate_streams, estimate_window,
                        estimate_windows_parallel, make_engine_pass)
 
 __all__ = [
@@ -24,7 +24,8 @@ __all__ = [
     "SortTables", "retained_window", "sort_events", "stage_policy",
     "GainThresholdController", "gain", "should_stay",
     "cgpr", "energy",
-    "WindowResult", "estimate_batch", "estimate_sequence",
+    "WindowResult", "estimate_batch", "estimate_batch_donated",
+    "estimate_sequence",
     "estimate_streams", "estimate_window", "estimate_windows_parallel",
     "make_engine_pass",
 ]

@@ -210,6 +210,29 @@ def estimate_batch(windows: EventWindow, omega0s: jax.Array,
     return estimate_windows_parallel(windows, omega0s, cfg)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("omega0s",))
+def estimate_batch_donated(windows: EventWindow, omega0s: jax.Array,
+                           cfg: CmaxConfig) -> WindowResult:
+    """`estimate_batch` with the warm-start buffer donated to XLA.
+
+    The async serving loop (launch/serve.py) dispatches a fresh (B, 3)
+    warm-start array per batch and never reads it back — donating it lets
+    XLA reuse the buffer in place, so continuous refill does not
+    accumulate live (B, 3) staging buffers while several batches are in
+    flight. Dispatch is asynchronous (JAX's default): the returned arrays
+    are futures; callers poll readiness (`jax.Array.is_ready`) or block.
+
+    Per-slot results depend only on that slot's window and warm start —
+    vmap lowers each window's computation independently — so a stream's
+    warm-start chain is preserved bit-for-bit no matter which in-flight
+    batch, slot position, or fill pattern its windows land in. That
+    invariant is what lets the service refill finished slots out of order
+    (tests/test_serving_async.py pins it).
+    """
+    return estimate_windows_parallel(windows, omega0s, cfg)
+
+
 def estimate_streams(windows: EventWindow, omega_inits: jax.Array,
                      cfg: CmaxConfig) -> Tuple[jax.Array, WindowResult]:
     """Warm-start-chained estimation of S independent streams.

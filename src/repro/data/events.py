@@ -193,6 +193,27 @@ class BucketPolicy:
         return min(self.max_bucket, max(self.min_bucket, _next_pow2(n)))
 
 
+    def classes(self, n_min: int, n_max: int) -> Tuple[int, ...]:
+        """Every length class a workload in [n_min, n_max] can occupy.
+
+        This is the executable set a service must hold warm for that
+        window-length range — the load generator (benchmarks/serving.py)
+        calibrates per-class service times over exactly this set.
+        """
+        if not (1 <= n_min <= n_max):
+            raise ValueError(f"need 1 <= n_min <= n_max, got {n_min}, "
+                             f"{n_max}")
+        lo, hi = self.bucket_of(n_min), self.bucket_of(n_max)
+        if self.sizes:
+            return tuple(s for s in sorted(self.sizes) if lo <= s <= hi)
+        out = []
+        c = lo
+        while c <= hi:
+            out.append(c)
+            c *= 2
+        return tuple(out)
+
+
 def pow2_policy(min_bucket: int = 1024,
                 max_bucket: int = 1 << 20) -> BucketPolicy:
     return BucketPolicy(name="pow2", min_bucket=min_bucket,
@@ -240,6 +261,25 @@ def batch_windows(wins: Sequence[EventWindow],
     return EventWindow(x=stack(lambda w: w.x), y=stack(lambda w: w.y),
                        t=stack(lambda w: w.t), p=stack(lambda w: w.p),
                        valid=stack(lambda w: w.valid))
+
+
+def fill_batch(wins: Sequence[EventWindow], n_pad: int, batch_b: int
+               ) -> Tuple[EventWindow, int]:
+    """Admit a partial batch into a full (batch_b, n_pad) batch class.
+
+    A batch class is a compiled shape; when fewer than `batch_b` windows
+    are admissible the remaining slots are filled by replicating the
+    batch leader (finite, well-formed data — fill results are computed
+    and discarded by the caller). Returns (padded batch, n_fill).
+    """
+    if not wins:
+        raise ValueError("fill_batch needs at least one window")
+    n_fill = batch_b - len(wins)
+    if n_fill < 0:
+        raise ValueError(
+            f"{len(wins)} windows exceed batch class {batch_b}")
+    ev = batch_windows(list(wins) + [wins[0]] * n_fill, n_pad)
+    return ev, n_fill
 
 
 def bucketize(wins: Sequence[EventWindow], policy: BucketPolicy

@@ -1,12 +1,16 @@
-"""Serving launchers: the CMAX batched estimation service + the LM demo.
+"""Serving launchers: the async continuous-batching CMAX estimation
+service (+ the synchronous baseline and the LM demo).
 
-The primary entry point is the high-throughput batched estimation service
-(DESIGN.md §4): a request queue of variable-length event windows is
-drained into padded, bucketed batches and pushed through the jitted
-coarse-to-fine adaptive pipeline, with warm-start chaining per stream and
-an explicit executable cache keyed on (bucket size, batch class, config).
+The primary entry point is `AsyncBatchedEstimationService` (DESIGN.md
+§Serving): an admission -> bucket -> in-flight -> refill -> completion
+loop over variable-length event windows. Requests are admitted while
+batches are in flight (JAX async dispatch, donated warm-start buffers),
+a finished batch's capacity is refilled immediately without waiting for
+the queue to drain, and per-request deadline/priority classes shed late
+windows instead of letting them stall the queue — the serving-time
+analogue of the paper's low-value-iteration suppression.
 
-    # batched CMAX estimation over synthetic ragged streams
+    # async continuous-batching CMAX service over synthetic ragged streams
     PYTHONPATH=src python -m repro.launch.serve cmax \
         --streams 4 --windows 4 --policy pow2
 
@@ -16,14 +20,14 @@ an explicit executable cache keyed on (bucket size, batch class, config).
 
 Library use (see examples/serve_batch.py for a runnable version):
 
-    from repro.launch.serve import BatchedEstimationService
-    from repro.data import events as ev
+    from repro.launch.serve import AsyncBatchedEstimationService
 
-    svc = BatchedEstimationService(cfg, policy=ev.pow2_policy(512))
-    svc.submit("cam0", window_a)        # 1-D EventWindow, any length
-    svc.submit("cam1", window_b)
-    for resp in svc.drain():            # list of WindowResponse
-        print(resp.stream_id, resp.seq, resp.omega)
+    svc = AsyncBatchedEstimationService(cfg)
+    svc.submit("cam0", window_a, deadline=svc.clock.now() + 0.05)
+    svc.submit("cam1", window_b, priority=1)
+    svc.poll()                         # non-blocking: harvest + refill
+    for resp in svc.drain():           # run the queue to completion
+        print(resp.stream_id, resp.seq, resp.status, resp.omega)
 
 Design notes:
 
@@ -33,13 +37,21 @@ Design notes:
     the executable count is O(#length classes x log2(max_batch)) — set by
     configuration, never by the workload.
   * Per-stream ordering. Windows of one stream are estimated in order
-    (warm-start chaining needs the previous result), so one batch admits
-    at most one window per stream. Concurrency comes from many streams,
-    which is exactly the fleet-scale serving shape.
+    (warm-start chaining needs the previous result), so a stream has at
+    most one window queued-or-computing per batch; a stream with a window
+    in flight is "busy" and its later windows wait for the harvest.
+    Concurrency comes from many streams — the fleet-scale serving shape.
+  * Scheduling is injectable. The loop never reads wall time or touches
+    the device directly: a `Clock` provides time (deadlines are absolute
+    clock values) and an `Executor` runs batches. Production uses
+    `MonotonicClock` + `AsyncDispatchExecutor`; tests drive the exact
+    same state machine with `FakeClock` + a manual-completion executor
+    (tests/test_serving_async.py), and the load generator replays Poisson
+    arrival traces in virtual time (benchmarks/serving.py).
   * Batch fill. A partially full batch class is filled by replicating the
-    batch leader; fill slots cost compute but are discarded, and the
-    `padded_slot_frac` stat reports both event- and batch-padding so
-    policies can be compared (benchmarks/serving.py).
+    batch leader (data/events.py `fill_batch`); fill slots cost compute
+    but are discarded, and `padded_slot_frac` reports both event- and
+    batch-padding so policies can be compared.
 """
 from __future__ import annotations
 
@@ -52,6 +64,125 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# Injectable clocks + executors
+# ---------------------------------------------------------------------------
+
+
+class MonotonicClock:
+    """Wall time (time.monotonic); the production clock."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class FakeClock:
+    """Manually advanced clock for deterministic scheduler tests and the
+    virtual-time load generator."""
+
+    def __init__(self, t: float = 0.0):
+        self._t = float(t)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"clock cannot run backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+    def advance_to(self, t: float) -> float:
+        self.advance(max(0.0, float(t) - self._t))
+        return self._t
+
+
+class AsyncDispatchExecutor:
+    """The production executor: JAX async dispatch.
+
+    `submit` calls the jitted batch function and returns immediately —
+    the result arrays are futures backed by in-flight device buffers.
+    `done` polls buffer readiness without blocking; `wait` blocks.
+    """
+
+    needs_data = True   # the service must materialize the padded batch
+
+    def submit(self, fn, ev_batch, om_batch, bucket_n: int, batch_b: int):
+        return fn(ev_batch, om_batch)
+
+    def done(self, handle) -> bool:
+        import jax
+        return all(leaf.is_ready() for leaf in jax.tree.leaves(handle)
+                   if hasattr(leaf, "is_ready"))
+
+    def wait(self, handle):
+        import jax
+        return jax.block_until_ready(handle)
+
+
+class InlineExecutor:
+    """Synchronous executor: computes at submit, always done. Used where
+    determinism matters more than overlap (tests, exact-equivalence
+    checks)."""
+
+    needs_data = True
+
+    def submit(self, fn, ev_batch, om_batch, bucket_n: int, batch_b: int):
+        import jax
+        return jax.block_until_ready(fn(ev_batch, om_batch))
+
+    def done(self, handle) -> bool:
+        return True
+
+    def wait(self, handle):
+        return handle
+
+
+class ManualExecutor:
+    """Deterministic test executor: computes the real result at submit
+    but holds completion until the test calls `release` — so tests can
+    walk the admission/in-flight/refill state machine one transition at a
+    time, including out-of-order batch completion."""
+
+    needs_data = True
+
+    def __init__(self):
+        self._results: Dict[int, object] = {}
+        self._released: set = set()
+        self._next = 0
+
+    def submit(self, fn, ev_batch, om_batch, bucket_n: int, batch_b: int):
+        import jax
+        h = self._next
+        self._next += 1
+        self._results[h] = jax.block_until_ready(fn(ev_batch, om_batch))
+        return h
+
+    def release(self, handle: Optional[int] = None) -> None:
+        """Mark one in-flight batch (or all, when handle is None) done."""
+        if handle is None:
+            self._released.update(self._results.keys())
+        else:
+            if handle not in self._results:
+                raise KeyError(f"unknown handle {handle}")
+            self._released.add(handle)
+
+    def in_flight(self) -> List[int]:
+        return sorted(set(self._results) - self._released)
+
+    def done(self, handle) -> bool:
+        return handle in self._released
+
+    def wait(self, handle):
+        self._released.add(handle)    # a blocking wait forces completion
+        return self._results[handle]
+
+
+# ---------------------------------------------------------------------------
+# Requests / responses
+# ---------------------------------------------------------------------------
+
+
 @dataclasses.dataclass(frozen=True)
 class WindowRequest:
     """One queued estimation request: a single variable-length window."""
@@ -60,20 +191,315 @@ class WindowRequest:
     window: object           # 1-D EventWindow
     bucket_n: int            # length class (computed once at submit)
     omega_hint: Optional[np.ndarray] = None   # overrides the warm start
+    priority: int = 0        # higher is served first (FIFO within a class)
+    deadline: Optional[float] = None   # absolute clock time; None = no SLO
+    t_submit: float = 0.0    # clock time of submission
+    order: int = 0           # global arrival index (FIFO tiebreak)
 
 
 @dataclasses.dataclass(frozen=True)
 class WindowResponse:
     stream_id: str
     seq: int
-    omega: np.ndarray        # (3,) estimate
-    iters: Tuple[int, ...]   # adaptive iterations per stage
+    omega: np.ndarray        # (3,) estimate ("ok") / last warm start ("shed")
+    iters: Tuple[int, ...]   # adaptive iterations per stage (() when shed)
     bucket_n: int            # event-length class the request ran in
-    batch_b: int             # batch class the request ran in
+    batch_b: int             # batch class the request ran in (0 when shed)
+    status: str = "ok"       # "ok" | "shed"
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class _InFlight:
+    requests: List[WindowRequest]
+    handle: object
+    bucket_n: int
+    batch_b: int
+    t_dispatch: float
+
+
+def _batch_class(b: int, max_batch: int, mesh) -> int:
+    """Pad a raw batch size to its power-of-two class (mesh-divisible)."""
+    from repro.data.events import _next_pow2
+    cls = min(max_batch, _next_pow2(b))
+    if mesh is not None:
+        from repro.core.distributed import _dp_extent
+        ndev = _dp_extent(mesh)
+        cls = max(cls, ndev)
+        cls += (-cls) % ndev
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# The async continuous-batching service (DESIGN.md §Serving)
+# ---------------------------------------------------------------------------
+
+
+class AsyncBatchedEstimationService:
+    """Admission -> bucket -> in-flight -> refill -> completion loop.
+
+    Parameters:
+      cfg: CmaxConfig (static; part of every executable-cache key).
+      policy: events.BucketPolicy mapping raw event counts to length
+        classes (default: power-of-two buckets from 512).
+      max_batch: largest batch class; smaller batches pad to the next
+        power of two.
+      mesh: optional jax mesh — batches then run through
+        `core.distributed.estimate_batch_sharded` (batch classes kept
+        divisible by the mesh's DP extent).
+      clock: time source (default MonotonicClock). Deadlines are absolute
+        values on this clock.
+      executor: batch runner (default AsyncDispatchExecutor).
+      max_in_flight: dispatch depth — how many batches may be in flight
+        before admission pauses (2 = one computing + one queued keeps the
+        device saturated without unbounded buffering).
+
+    The drive loop is `poll()`: harvest every finished in-flight batch
+    (any order), shed queued requests whose deadline has passed, then
+    launch new batches until the in-flight window is full or nothing is
+    admissible. `poll` never blocks; `drain()` polls to completion,
+    blocking on the oldest in-flight batch when otherwise idle.
+    """
+
+    def __init__(self, cfg, policy=None, max_batch: int = 8, mesh=None,
+                 clock=None, executor=None, max_in_flight: int = 2):
+        from repro.data import events as ev_data
+        self.cfg = cfg
+        self.policy = policy or ev_data.pow2_policy(min_bucket=512)
+        self.max_batch = int(max_batch)
+        self.mesh = mesh
+        self.clock = clock or MonotonicClock()
+        self.executor = executor or AsyncDispatchExecutor()
+        self.max_in_flight = int(max_in_flight)
+        self._queue: List[WindowRequest] = []   # arrival order
+        self._seq: Dict[str, int] = {}
+        self._warm: Dict[str, np.ndarray] = {}
+        self._busy: set = set()                 # streams with a window in flight
+        self._inflight: Deque[_InFlight] = deque()
+        self._ready: List[WindowResponse] = []
+        self._order = 0
+        self._cache: Dict[Tuple[int, int], object] = {}
+        self.stats = {"windows": 0, "batches": 0, "compiles": 0,
+                      "event_slots": 0, "raw_events": 0, "fill_slots": 0,
+                      "shed": 0}
+
+    # -- request side --------------------------------------------------------
+
+    def submit(self, stream_id: str, window, omega_hint=None,
+               priority: int = 0, deadline: Optional[float] = None) -> int:
+        """Enqueue one window for `stream_id`; returns its sequence number.
+
+        Windows of one stream must be submitted in time order; they are
+        estimated in that order with warm-start chaining. `deadline` is an
+        absolute time on the service clock: a request still queued past
+        its deadline is shed (status="shed") instead of computed.
+        """
+        # bucketing at submit time rejects unservable sizes immediately —
+        # a poison request must never sit in the queue
+        bucket_n = self.policy.bucket_of(window.n)
+        seq = self._seq.get(stream_id, 0)
+        self._seq[stream_id] = seq + 1
+        hint = None if omega_hint is None else np.asarray(omega_hint,
+                                                          np.float32)
+        self._queue.append(WindowRequest(
+            stream_id, seq, window, bucket_n, hint, int(priority),
+            None if deadline is None else float(deadline),
+            self.clock.now(), self._order))
+        self._order += 1
+        return seq
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def in_flight(self) -> int:
+        """Requests currently dispatched and not yet harvested."""
+        return sum(len(fb.requests) for fb in self._inflight)
+
+    # -- executable cache ----------------------------------------------------
+
+    def _executable(self, bucket_n: int, batch_b: int):
+        """The compiled batch function for one (length, batch) class."""
+        from repro.core.pipeline import estimate_batch_donated
+
+        key = (bucket_n, batch_b)
+        fn = self._cache.get(key)
+        if fn is None:
+            cfg = self.cfg
+            if self.mesh is not None:
+                from repro.core.distributed import estimate_batch_sharded
+                mesh = self.mesh
+                fn = lambda w, o: estimate_batch_sharded(w, o, cfg, mesh)
+            else:
+                # module-level jitted with static cfg + donated warm-start
+                # buffer; executables are shared across service instances —
+                # the per-key entry only tracks which shape classes THIS
+                # service has needed.
+                fn = lambda w, o: estimate_batch_donated(w, o, cfg)
+            self._cache[key] = fn
+            self.stats["compiles"] += 1
+        return fn
+
+    # -- scheduling: shed / admit / launch ------------------------------------
+
+    def _shed_expired(self) -> None:
+        """Drop queued requests whose deadline has passed. The shed notice
+        is emitted immediately (it never waits behind compute); the
+        stream's warm-start chain simply skips the shed window."""
+        now = self.clock.now()
+        keep = []
+        for r in self._queue:
+            if r.deadline is not None and now > r.deadline:
+                self.stats["shed"] += 1
+                om = self._warm.get(r.stream_id, np.zeros(3, np.float32))
+                self._ready.append(WindowResponse(
+                    r.stream_id, r.seq, om, (), r.bucket_n, 0,
+                    status="shed", t_submit=r.t_submit, t_done=now))
+            else:
+                keep.append(r)
+        self._queue = keep
+
+    def _admissible(self) -> List[WindowRequest]:
+        """The oldest pending window of every non-busy stream. Only a
+        stream's oldest window is admissible — and never while an earlier
+        window of the stream is in flight — or warm-start chaining would
+        run the stream out of order."""
+        oldest: Dict[str, WindowRequest] = {}
+        for r in self._queue:     # arrival order == seq order per stream
+            if r.stream_id not in self._busy:
+                oldest.setdefault(r.stream_id, r)
+        return list(oldest.values())
+
+    def _launch_one(self) -> bool:
+        """Form and dispatch one batch: the highest-priority (then oldest)
+        admissible request leads and fixes the length class; admissible
+        same-class requests join in priority order up to max_batch."""
+        import jax.numpy as jnp
+        from repro.data import events as ev_data
+
+        cands = self._admissible()
+        if not cands:
+            return False
+        cands.sort(key=lambda r: (-r.priority, r.order))
+        leader = cands[0]
+        bucket_n = leader.bucket_n
+        batch = [r for r in cands if r.bucket_n == bucket_n][:self.max_batch]
+        batch_b = _batch_class(len(batch), self.max_batch, self.mesh)
+
+        taken = {id(r) for r in batch}
+        self._queue = [r for r in self._queue if id(r) not in taken]
+        for r in batch:
+            self._busy.add(r.stream_id)
+
+        n_fill = batch_b - len(batch)
+        if getattr(self.executor, "needs_data", True):
+            omega0 = [r.omega_hint if r.omega_hint is not None
+                      else self._warm.get(r.stream_id,
+                                          np.zeros(3, np.float32))
+                      for r in batch]
+            omega0 += [omega0[0]] * n_fill
+            ev_batch, n_fill = ev_data.fill_batch(
+                [r.window for r in batch], bucket_n, batch_b)
+            om_batch = jnp.asarray(np.stack(omega0))
+        else:
+            ev_batch = om_batch = None    # virtual-time simulation
+
+        fn = self._executable(bucket_n, batch_b)
+        handle = self.executor.submit(fn, ev_batch, om_batch,
+                                      bucket_n, batch_b)
+        self._inflight.append(_InFlight(batch, handle, bucket_n, batch_b,
+                                        self.clock.now()))
+        self.stats["batches"] += 1
+        self.stats["event_slots"] += bucket_n * batch_b
+        self.stats["raw_events"] += sum(r.window.n for r in batch)
+        self.stats["fill_slots"] += n_fill
+        return True
+
+    # -- completion ------------------------------------------------------------
+
+    def _finish(self, fb: _InFlight) -> None:
+        res = self.executor.wait(fb.handle)
+        now = self.clock.now()
+        omegas = np.asarray(res.omega)
+        iters = [np.asarray(tr.iters) for tr in getattr(res, "stages", ())]
+        for i, r in enumerate(fb.requests):
+            om = omegas[i]
+            self._warm[r.stream_id] = om
+            self._busy.discard(r.stream_id)
+            self._ready.append(WindowResponse(
+                r.stream_id, r.seq, om, tuple(int(it[i]) for it in iters),
+                fb.bucket_n, fb.batch_b, status="ok",
+                t_submit=r.t_submit, t_done=now))
+        self.stats["windows"] += len(fb.requests)
+
+    def _harvest(self, block: bool = False) -> bool:
+        """Collect every finished in-flight batch (in any completion
+        order — slot refill does not wait for older batches). When `block`
+        and nothing has finished, wait on the oldest in-flight batch."""
+        if block and self._inflight and \
+                not any(self.executor.done(fb.handle)
+                        for fb in self._inflight):
+            self.executor.wait(self._inflight[0].handle)
+        progressed = False
+        still: Deque[_InFlight] = deque()
+        for fb in self._inflight:
+            if self.executor.done(fb.handle):
+                self._finish(fb)
+                progressed = True
+            else:
+                still.append(fb)
+        self._inflight = still
+        return progressed
+
+    # -- drive loop -------------------------------------------------------------
+
+    def poll(self) -> List[WindowResponse]:
+        """One non-blocking scheduler turn: harvest finished batches, shed
+        expired requests, refill the in-flight window from the queue.
+        Returns the responses completed since the last call."""
+        self._harvest(block=False)
+        self._shed_expired()
+        while len(self._inflight) < self.max_in_flight and self._launch_one():
+            pass
+        out, self._ready = self._ready, []
+        return out
+
+    def drain(self) -> List[WindowResponse]:
+        """Poll until the queue and the in-flight window are both empty,
+        blocking only when nothing can progress otherwise."""
+        out: List[WindowResponse] = []
+        while True:
+            out.extend(self.poll())
+            if not self._queue and not self._inflight:
+                return out
+            if self._inflight:
+                self._harvest(block=True)
+
+    @property
+    def padded_slot_frac(self) -> float:
+        """Fraction of event slots that were padding (event-length padding
+        + batch-fill replication), over everything dispatched so far."""
+        total = self.stats["event_slots"]
+        return (total - self.stats["raw_events"]) / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Synchronous baseline (the PR-1 FIFO drain). Kept as the measured
+# reference the async loop must beat (benchmarks/serving.py) and for
+# callers that want strictly sequential batch execution.
+# ---------------------------------------------------------------------------
 
 
 class BatchedEstimationService:
     """Queue -> bucketed batch -> jitted adaptive pipeline -> responses.
+
+    Synchronous FIFO drain: `step()` blocks while its batch computes, and
+    nothing can be admitted mid-batch. See `AsyncBatchedEstimationService`
+    for the continuous-batching loop with deadlines/priorities.
 
     Parameters:
       cfg: CmaxConfig (static; part of every executable-cache key).
@@ -113,7 +539,7 @@ class BatchedEstimationService:
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
         hint = None if omega_hint is None else np.asarray(omega_hint,
-                                                         np.float32)
+                                                          np.float32)
         self._queue.append(
             WindowRequest(stream_id, seq, window, bucket_n, hint))
         return seq
@@ -146,14 +572,7 @@ class BatchedEstimationService:
         return fn
 
     def _batch_class(self, b: int) -> int:
-        from repro.data.events import _next_pow2
-        cls = min(self.max_batch, _next_pow2(b))
-        if self.mesh is not None:
-            from repro.core.distributed import _dp_extent
-            ndev = _dp_extent(self.mesh)
-            cls = max(cls, ndev)
-            cls += (-cls) % ndev
-        return cls
+        return _batch_class(b, self.max_batch, self.mesh)
 
     # -- batch formation + execution ---------------------------------------
 
@@ -197,16 +616,13 @@ class BatchedEstimationService:
         bucket_n = batch[0].bucket_n
         batch_b = self._batch_class(len(batch))
 
-        wins = [req.window for req in batch]
         omega0 = [req.omega_hint if req.omega_hint is not None
                   else self._warm.get(req.stream_id, np.zeros(3, np.float32))
                   for req in batch]
-        n_fill = batch_b - len(batch)
         # fill slots replicate the leader (finite data, results discarded)
-        wins += [batch[0].window] * n_fill
+        ev_batch, n_fill = ev_data.fill_batch(
+            [req.window for req in batch], bucket_n, batch_b)
         omega0 += [omega0[0]] * n_fill
-
-        ev_batch = ev_data.batch_windows(wins, bucket_n)
         om_batch = jnp.asarray(np.stack(omega0))
         fn = self._executable(bucket_n, batch_b)
         res = jax.block_until_ready(fn(ev_batch, om_batch))
@@ -225,7 +641,7 @@ class BatchedEstimationService:
         self.stats["windows"] += len(batch)
         self.stats["batches"] += 1
         self.stats["event_slots"] += bucket_n * batch_b
-        self.stats["raw_events"] += sum(w.n for w in wins[:len(batch)])
+        self.stats["raw_events"] += sum(req.window.n for req in batch)
         self.stats["fill_slots"] += n_fill
         return out
 
@@ -260,8 +676,12 @@ def _run_cmax(args) -> None:
     else:
         policy = ev_data.single_policy(args.max_events)
 
-    svc = BatchedEstimationService(cfg, policy=policy,
-                                   max_batch=args.max_batch)
+    if args.sync:
+        svc = BatchedEstimationService(cfg, policy=policy,
+                                       max_batch=args.max_batch)
+    else:
+        svc = AsyncBatchedEstimationService(cfg, policy=policy,
+                                            max_batch=args.max_batch)
 
     # synthetic ragged workload: S streams x K windows, log-uniform lengths
     truth = {}
@@ -286,11 +706,18 @@ def _run_cmax(args) -> None:
 
     errs = [float(np.linalg.norm(r.omega - truth[r.stream_id][r.seq]))
             for r in responses]
+    mode = "sync FIFO drain" if args.sync else "async continuous batching"
     print(f"served {len(responses)}/{n_req} windows in {dt:.2f}s "
-          f"({len(responses) / dt:.2f} windows/s incl compile)")
+          f"({len(responses) / dt:.2f} windows/s incl compile, {mode})")
     print(f"batches={svc.stats['batches']} compiles={svc.stats['compiles']} "
           f"padded_slot_frac={svc.padded_slot_frac:.3f} "
           f"policy={svc.policy.name}")
+    if not args.sync:
+        lats = sorted(r.latency for r in responses)
+        p50 = lats[len(lats) // 2]
+        p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+        print(f"latency p50={1e3 * p50:.1f}ms p99={1e3 * p99:.1f}ms "
+              f"shed={svc.stats['shed']}")
     print(f"rmse vs ground truth: "
           f"{float(np.sqrt(np.mean(np.square(errs)))):.4f} rad/s")
 
@@ -354,6 +781,8 @@ def main(argv=None):
     cm.add_argument("--min-bucket", type=int, default=1024)
     cm.add_argument("--max-batch", type=int, default=8)
     cm.add_argument("--policy", choices=["pow2", "single"], default="pow2")
+    cm.add_argument("--sync", action="store_true",
+                    help="use the synchronous FIFO-drain baseline")
 
     lm = sub.add_parser("lm", help="LM prefill + batched decode demo")
     lm.add_argument("--arch", required=True)

@@ -1,0 +1,201 @@
+"""Property-based tests (hypothesis; deterministic shim fallback via
+tests/conftest.py) for the ragged-window batching layer (DESIGN.md §4):
+bucket-class invariants, padding-mask exactness, FIFO preservation under
+bucketed admission, and the batched-vs-per-window estimation round trip."""
+import types
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from helpers import small_camera
+
+from repro.core import CmaxConfig, StageConfig, estimate_batch, \
+    estimate_window
+from repro.core.types import EventWindow
+from repro.data import events as ev_data
+from repro.launch.serve import AsyncBatchedEstimationService, FakeClock
+
+
+def random_window(rng: np.random.Generator, n: int, cam) -> EventWindow:
+    """A random (not scene-consistent) window: enough for layout/batching
+    invariants, which must hold for ANY well-formed event content."""
+    return EventWindow(
+        x=jnp.asarray(rng.integers(0, cam.width, n).astype(np.float32)),
+        y=jnp.asarray(rng.integers(0, cam.height, n).astype(np.float32)),
+        t=jnp.asarray(np.sort(rng.uniform(0, 0.02, n)).astype(np.float32)),
+        p=jnp.asarray(rng.choice([-1.0, 1.0], n).astype(np.float32)),
+        valid=jnp.asarray(rng.random(n) < 0.9))
+
+
+# --- bucket-class invariants ---------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 1 << 18), st.integers(4, 12), st.integers(13, 19))
+def test_pow2_bucket_tight_and_monotone(n, min_exp, max_exp):
+    """pow2 classes: bucket >= n always; bucket < 2n except in the floor
+    class; results are powers of two inside [min_bucket, max_bucket]; and
+    bucket_of is monotone in n."""
+    pol = ev_data.pow2_policy(min_bucket=1 << min_exp,
+                              max_bucket=1 << max_exp)
+    n = min(n, pol.max_bucket)       # beyond max_bucket it raises (tested
+    # in test_events.py); the class invariants apply to admissible n only
+    b = pol.bucket_of(n)
+    assert b >= n
+    assert pol.min_bucket <= b <= pol.max_bucket
+    assert b & (b - 1) == 0                      # power of two
+    if b > pol.min_bucket:                       # not the floor class
+        assert b < 2 * n
+    if n > 1:
+        assert pol.bucket_of(n - 1) <= b         # monotone
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 1 << 16), st.integers(4, 10))
+def test_classes_cover_every_bucket_in_range(n, min_exp):
+    pol = ev_data.pow2_policy(min_bucket=1 << min_exp, max_bucket=1 << 18)
+    classes = pol.classes(1, 1 << 16)
+    assert pol.bucket_of(n) in classes
+    assert list(classes) == sorted(set(classes))
+
+
+# --- padding-mask exactness ----------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 300), st.integers(0, 200))
+def test_pad_window_mask_exactness(seed, n, extra):
+    """Padding appends exactly `extra` valid=False slots and is bit-exact
+    on every original slot of every field."""
+    rng = np.random.default_rng(seed)
+    w = random_window(rng, n, small_camera())
+    padded = ev_data.pad_window(w, n + extra)
+    assert padded.n == n + extra
+    for a, b in [(padded.x, w.x), (padded.y, w.y), (padded.t, w.t),
+                 (padded.p, w.p), (padded.valid, w.valid)]:
+        np.testing.assert_array_equal(np.asarray(a[:n]), np.asarray(b))
+    assert not np.asarray(padded.valid[n:]).any()
+    assert int(padded.valid.sum()) == int(w.valid.sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6), st.integers(1, 3))
+def test_fill_batch_mask_and_fill_slots(seed, n_windows, extra_b):
+    """fill_batch: every real window occupies its slot bit-exactly, fill
+    slots replicate the leader, batch mask is exact per slot."""
+    rng = np.random.default_rng(seed)
+    cam = small_camera()
+    wins = [random_window(rng, int(rng.integers(1, 256)), cam)
+            for _ in range(n_windows)]
+    n_pad = max(w.n for w in wins)
+    batch_b = n_windows + extra_b
+    ev, n_fill = ev_data.fill_batch(wins, n_pad, batch_b)
+    assert n_fill == extra_b
+    assert ev.x.shape == (batch_b, n_pad)
+    for i, w in enumerate(wins):
+        np.testing.assert_array_equal(np.asarray(ev.x[i, :w.n]),
+                                      np.asarray(w.x))
+        np.testing.assert_array_equal(np.asarray(ev.valid[i, :w.n]),
+                                      np.asarray(w.valid))
+        assert not np.asarray(ev.valid[i, w.n:]).any()
+    for i in range(n_windows, batch_b):          # fill = leader replica
+        np.testing.assert_array_equal(np.asarray(ev.x[i]),
+                                      np.asarray(ev.x[0]))
+
+
+# --- FIFO preservation under bucketed admission ----------------------------------
+
+
+class _NullExecutor:
+    """Scheduling-only executor: no compute, instant completion — lets the
+    admission/refill state machine run thousands of requests per second so
+    ordering can be property-tested."""
+
+    needs_data = False
+
+    def submit(self, fn, ev, om, bucket_n: int, batch_b: int):
+        return types.SimpleNamespace(
+            omega=np.zeros((batch_b, 3), np.float32), stages=())
+
+    def done(self, handle):
+        return True
+
+    def wait(self, handle):
+        return handle
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 5), st.integers(1, 6),
+       st.sampled_from([1, 2, 4]), st.booleans())
+def test_service_preserves_per_stream_fifo(seed, n_streams, n_windows,
+                                           max_batch, with_priorities):
+    """For ANY mix of streams, window lengths, priorities, and refill
+    interleavings, each stream's ok-responses come back in submission
+    order, every request is answered exactly once, and batch classes stay
+    within policy."""
+    rng = np.random.default_rng(seed)
+    cam = small_camera()
+    pol = ev_data.pow2_policy(min_bucket=64, max_bucket=512)
+    svc = AsyncBatchedEstimationService(
+        CmaxConfig(camera=cam), policy=pol, max_batch=max_batch,
+        clock=FakeClock(), executor=_NullExecutor(),
+        max_in_flight=int(rng.integers(1, 4)))
+
+    expected = {}
+    responses = []
+    for s in range(n_streams):
+        for k in range(int(rng.integers(1, n_windows + 1))):
+            w = random_window(rng, int(rng.integers(1, 400)), cam)
+            prio = int(rng.integers(0, 3)) if with_priorities else 0
+            seq = svc.submit(f"s{s}", w, priority=prio)
+            expected[(f"s{s}", seq)] = pol.bucket_of(w.n)
+            if rng.random() < 0.5:      # interleave scheduling with arrival
+                responses.extend(svc.poll())
+    responses.extend(svc.drain())
+
+    assert {(r.stream_id, r.seq) for r in responses} == set(expected)
+    for r in responses:
+        assert r.status == "ok"
+        assert r.bucket_n == expected[(r.stream_id, r.seq)]
+        assert r.batch_b <= max_batch and r.batch_b & (r.batch_b - 1) == 0
+    for s in range(n_streams):
+        seqs = [r.seq for r in responses if r.stream_id == f"s{s}"]
+        assert seqs == sorted(seqs)
+
+
+# --- batched == per-window round trip -------------------------------------------
+
+
+def _tiny_cfg(cam):
+    return CmaxConfig(camera=cam, stages=(
+        StageConfig(scale=0.5, tau=4e-4, max_iters=3, blur_taps=3,
+                    blur_sigma=0.5, keep_ratio=0.5, step_scale=1.5),
+        StageConfig(scale=1.0, tau=1.5e-4, max_iters=3, blur_taps=5,
+                    blur_sigma=1.0, keep_ratio=1.0),
+    ))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_estimate_batch_round_trips_per_window(seed, n_windows):
+    """estimate_batch over a ragged padded batch returns, slot for slot,
+    what per-window estimate_window returns on the same padded windows —
+    for arbitrary (even scene-inconsistent) event content."""
+    rng = np.random.default_rng(seed)
+    cam = small_camera()
+    cfg = _tiny_cfg(cam)
+    wins = [random_window(rng, int(rng.integers(32, 256)), cam)
+            for _ in range(n_windows)]
+    n_pad = max(w.n for w in wins)
+    batch = ev_data.batch_windows(wins, n_pad)
+    om0 = jnp.zeros((n_windows, 3))
+    res = estimate_batch(batch, om0, cfg)
+    for i, w in enumerate(wins):
+        ref = estimate_window(ev_data.pad_window(w, n_pad),
+                              jnp.zeros(3), cfg)
+        np.testing.assert_allclose(np.asarray(res.omega[i]),
+                                   np.asarray(ref.omega), atol=1e-5)
+        for tr_b, tr_1 in zip(res.stages, ref.stages):
+            assert int(tr_b.iters[i]) == int(tr_1.iters)

@@ -1,0 +1,350 @@
+"""Deterministic tests for the async continuous-batching service
+(DESIGN.md §Serving): the scheduler is driven by an injectable FakeClock
++ manual-completion executor, so every transition of the admission ->
+bucket -> in-flight -> refill -> completion state machine is exercised
+without real time or async dispatch — plus exact CPU equivalence of the
+async-batched path against the sequential per-window reference."""
+import numpy as np
+import jax.numpy as jnp
+
+from helpers import small_camera
+
+from repro.core import CmaxConfig, StageConfig, estimate_window
+from repro.data import events as ev_data
+from repro.launch.serve import (AsyncBatchedEstimationService,
+                                BatchedEstimationService, FakeClock,
+                                InlineExecutor, ManualExecutor)
+
+
+def fast_cfg(cam=None) -> CmaxConfig:
+    """Two cheap stages on the tiny camera — adaptive logic intact."""
+    return CmaxConfig(camera=cam or small_camera(), stages=(
+        StageConfig(scale=0.5, tau=4e-4, max_iters=4, blur_taps=3,
+                    blur_sigma=0.5, keep_ratio=0.5, step_scale=1.5),
+        StageConfig(scale=1.0, tau=1.5e-4, max_iters=4, blur_taps=5,
+                    blur_sigma=1.0, keep_ratio=1.0),
+    ))
+
+
+def ragged_streams(cam, n_streams=2, n_windows=3, n_max=512):
+    """{stream: [ragged windows]} on the tiny camera."""
+    out = {}
+    for s in range(n_streams):
+        spec = ev_data.SequenceSpec(
+            name=f"s{s}", n_windows=n_windows, events_per_window=n_max,
+            n_features=40, seed=50 + s, window_dt=0.03, camera=cam)
+        wins, _, _ = ev_data.make_sequence(spec)
+        lens = ev_data.ragged_lengths(n_windows, n_max // 3, n_max, seed=s)
+        out[f"s{s}"] = ev_data.ragged_from_sequence(wins, lens)
+    return out
+
+
+def one_window(cam, seed=0, n=256):
+    spec = ev_data.SequenceSpec(name="w", n_windows=1, events_per_window=n,
+                                n_features=40, seed=seed, camera=cam)
+    wins, _, _ = ev_data.make_sequence(spec)
+    return ev_data.window_slice(wins, 0)
+
+
+def make_svc(cam, **kw):
+    kw.setdefault("policy", ev_data.pow2_policy(min_bucket=128,
+                                                max_bucket=512))
+    kw.setdefault("clock", FakeClock())
+    kw.setdefault("executor", ManualExecutor())
+    return AsyncBatchedEstimationService(fast_cfg(cam), **kw)
+
+
+def reference_chain(windows, policy, cfg):
+    """Sequential per-window warm-start chain: the ground truth every
+    service schedule must reproduce."""
+    om = np.zeros(3, np.float32)
+    out = []
+    for w in windows:
+        res = estimate_window(ev_data.pad_window(w, policy.bucket_of(w.n)),
+                              jnp.asarray(om), cfg)
+        om = np.asarray(res.omega)
+        out.append(om)
+    return out
+
+
+# --- deadlines / shedding ----------------------------------------------------
+
+
+def test_deadline_expiry_sheds_queued_requests():
+    cam = small_camera()
+    clock = FakeClock()
+    ex = ManualExecutor()
+    svc = make_svc(cam, clock=clock, executor=ex, max_batch=1,
+                   max_in_flight=1)
+    w = one_window(cam)
+    svc.submit("a", w)                                 # no SLO, dispatches
+    assert svc.poll() == []
+    assert ex.in_flight() and svc.in_flight() == 1
+    # queued behind the busy stream with a deadline that then passes
+    svc.submit("a", w, deadline=clock.now() + 1.0)
+    clock.advance(2.0)
+    shed = svc.poll()
+    assert [r.status for r in shed] == ["shed"]
+    assert shed[0].seq == 1 and shed[0].batch_b == 0 and shed[0].iters == ()
+    assert shed[0].latency == 2.0                      # time spent queued
+    assert svc.stats["shed"] == 1
+    # the in-flight window is unaffected by the shed
+    ex.release()
+    done = svc.poll()
+    assert [r.status for r in done] == ["ok"] and done[0].seq == 0
+
+
+def test_deadline_in_future_is_not_shed():
+    cam = small_camera()
+    clock = FakeClock()
+    svc = make_svc(cam, clock=clock, executor=InlineExecutor())
+    svc.submit("a", one_window(cam), deadline=clock.now() + 10.0)
+    rs = svc.drain()
+    assert [r.status for r in rs] == ["ok"]
+    assert svc.stats["shed"] == 0
+
+
+def test_shed_window_skips_warm_start_chain():
+    """A shed window drops out of the stream's warm-start chain: the next
+    window chains from the last COMPLETED estimate, exactly as if the shed
+    window had never been submitted."""
+    cam = small_camera()
+    cfg = fast_cfg(cam)
+    pol = ev_data.pow2_policy(min_bucket=128, max_bucket=512)
+    wins = ragged_streams(cam, 1, n_windows=3)["s0"]
+
+    clock = FakeClock()
+    svc = make_svc(cam, clock=clock, executor=InlineExecutor())
+    svc.submit("a", wins[0])
+    rs = svc.drain()
+    svc.submit("a", wins[1], deadline=clock.now() - 1.0)   # already late
+    svc.submit("a", wins[2])
+    rs += svc.drain()
+    by = {r.seq: r for r in rs}
+    assert by[1].status == "shed"
+    ref = reference_chain([wins[0], wins[2]], pol, cfg)    # chain skips w1
+    np.testing.assert_array_equal(by[0].omega, ref[0])
+    np.testing.assert_array_equal(by[2].omega, ref[1])
+
+
+# --- priorities ---------------------------------------------------------------
+
+
+def test_priority_preempts_fifo_order():
+    """A later high-priority request leads the next batch ahead of older
+    low-priority ones (FIFO preserved within a priority class)."""
+    cam = small_camera()
+    ex = ManualExecutor()
+    svc = make_svc(cam, executor=ex, max_batch=2, max_in_flight=1)
+    w = one_window(cam)
+    svc.submit("a", w, priority=0)
+    svc.submit("b", w, priority=0)
+    svc.submit("c", w, priority=5)     # submitted last, highest priority
+    svc.poll()
+    assert svc.in_flight() == 2 and svc.pending() == 1
+    ex.release()
+    first = [(r.stream_id) for r in svc.poll() if r.status == "ok"]
+    assert first == ["c", "a"]         # c leads, then FIFO among prio 0
+    ex.release()
+    rest = [r.stream_id for r in svc.drain()]
+    assert rest == ["b"]
+
+
+def test_priority_cannot_reorder_one_stream():
+    """Per-stream seq order wins over priority: a stream's later window
+    never overtakes its earlier one, whatever its priority."""
+    cam = small_camera()
+    cfg = fast_cfg(cam)
+    pol = ev_data.pow2_policy(min_bucket=128, max_bucket=512)
+    wins = ragged_streams(cam, 1, n_windows=2)["s0"]
+    svc = make_svc(cam, executor=InlineExecutor(), max_batch=1)
+    svc.submit("a", wins[0], priority=0)
+    svc.submit("a", wins[1], priority=9)
+    rs = [r for r in svc.drain() if r.status == "ok"]
+    assert [r.seq for r in rs] == [0, 1]
+    ref = reference_chain(wins, pol, cfg)
+    np.testing.assert_array_equal(rs[0].omega, ref[0])
+    np.testing.assert_array_equal(rs[1].omega, ref[1])
+
+
+# --- continuous batching: admit while in flight, refill out of order ----------
+
+
+def test_admission_continues_while_batch_in_flight():
+    cam = small_camera()
+    ex = ManualExecutor()
+    svc = make_svc(cam, executor=ex, max_batch=2, max_in_flight=2)
+    w = one_window(cam)
+    svc.submit("a", w)
+    svc.submit("b", w)
+    svc.poll()
+    assert svc.in_flight() == 2 and len(ex.in_flight()) == 1
+    # requests keep being admitted and dispatched while batch 0 is in
+    # flight — that is the continuous-batching property
+    svc.submit("c", w)
+    svc.submit("d", w)
+    svc.poll()
+    assert svc.in_flight() == 4 and len(ex.in_flight()) == 2
+    assert svc.pending() == 0
+    ex.release()
+    assert len(svc.poll()) == 4
+
+
+def test_slot_refill_does_not_wait_for_older_batches():
+    """Batch 1 completes while batch 0 is still in flight: its capacity is
+    refilled immediately (out-of-order harvest + relaunch)."""
+    cam = small_camera()
+    ex = ManualExecutor()
+    svc = make_svc(cam, executor=ex, max_batch=2, max_in_flight=2)
+    w = one_window(cam)
+    for sid in "abcd":
+        svc.submit(sid, w)
+    svc.poll()                             # batch0 = (a,b), batch1 = (c,d)
+    h0, h1 = ex.in_flight()
+    svc.submit("e", w)
+    svc.submit("f", w)
+    ex.release(h1)                         # the YOUNGER batch finishes first
+    done = svc.poll()
+    assert sorted(r.stream_id for r in done) == ["c", "d"]
+    # (e, f) dispatched even though batch0 is still computing
+    assert svc.in_flight() == 4 and svc.pending() == 0
+    assert h0 in ex.in_flight() and len(ex.in_flight()) == 2
+    ex.release()
+    assert sorted(r.stream_id for r in svc.drain()) == list("abef")
+
+
+def test_stream_never_has_two_windows_in_flight():
+    """A stream's next window is not admitted until the previous one is
+    harvested — the warm-start chain needs the previous result."""
+    cam = small_camera()
+    ex = ManualExecutor()
+    svc = make_svc(cam, executor=ex, max_batch=1, max_in_flight=4)
+    wins = ragged_streams(cam, 1, n_windows=2, n_max=256)["s0"]
+    svc.submit("a", wins[0])
+    svc.submit("a", wins[1])
+    svc.poll()
+    assert svc.in_flight() == 1 and svc.pending() == 1   # w1 held back
+    ex.release()
+    svc.poll()
+    assert svc.in_flight() == 1 and svc.pending() == 0   # w1 launched now
+    ex.release()
+    rs = svc.poll()
+    assert [r.seq for r in rs] == [1]
+
+
+def test_warm_start_survives_out_of_order_refill():
+    """Two streams' chains interleave across out-of-order batch
+    completions; every estimate still equals the sequential per-window
+    chain bit-for-bit."""
+    cam = small_camera()
+    cfg = fast_cfg(cam)
+    pol = ev_data.pow2_policy(min_bucket=128, max_bucket=512)
+    streams = ragged_streams(cam, 2, n_windows=3)
+    ex = ManualExecutor()
+    svc = make_svc(cam, executor=ex, max_batch=1, max_in_flight=2)
+    for sid, wins in streams.items():
+        for w in wins:
+            svc.submit(sid, w)
+
+    rs = []
+    flip = False
+    while svc.pending() or svc.in_flight():
+        rs.extend(svc.poll())
+        pending = ex.in_flight()
+        if pending:                       # alternate which batch finishes
+            ex.release(pending[-1] if flip else pending[0])
+            flip = not flip
+    rs.extend(svc.poll())
+
+    assert len(rs) == 6
+    by = {(r.stream_id, r.seq): r for r in rs}
+    for sid, wins in streams.items():
+        ref = reference_chain(wins, pol, cfg)
+        for k in range(len(wins)):
+            np.testing.assert_array_equal(by[(sid, k)].omega, ref[k])
+    # ok-responses of each stream come back in seq order
+    for sid in streams:
+        seqs = [r.seq for r in rs if r.stream_id == sid]
+        assert seqs == sorted(seqs)
+
+
+# --- equivalence: async batched == sequential, exactly, on CPU ----------------
+
+
+def test_async_drain_exactly_matches_sequential_reference():
+    """The full async service (real async dispatch executor, donated
+    warm-start buffers, continuous refill) reproduces the sequential
+    per-window chain exactly on CPU — same bits, any schedule."""
+    cam = small_camera()
+    cfg = fast_cfg(cam)
+    pol = ev_data.pow2_policy(min_bucket=128, max_bucket=512)
+    streams = ragged_streams(cam, 3, n_windows=3)
+    svc = AsyncBatchedEstimationService(cfg, policy=pol, max_batch=4,
+                                        max_in_flight=2)
+    for sid, wins in streams.items():
+        for w in wins:
+            svc.submit(sid, w)
+    rs = svc.drain()
+    assert len(rs) == 9 and all(r.status == "ok" for r in rs)
+    by = {(r.stream_id, r.seq): r for r in rs}
+    for sid, wins in streams.items():
+        ref = reference_chain(wins, pol, cfg)
+        for k in range(len(wins)):
+            np.testing.assert_array_equal(by[(sid, k)].omega, ref[k])
+
+
+def test_async_matches_sync_service_exactly():
+    """Async and the synchronous FIFO-drain baseline produce identical
+    estimates for the same workload (equal accuracy — the serving
+    benchmark's throughput comparison is apples-to-apples)."""
+    cam = small_camera()
+    cfg = fast_cfg(cam)
+    pol = ev_data.pow2_policy(min_bucket=128, max_bucket=512)
+    streams = ragged_streams(cam, 3, n_windows=2)
+    a = AsyncBatchedEstimationService(cfg, policy=pol, max_batch=4)
+    b = BatchedEstimationService(cfg, policy=pol, max_batch=4)
+    for sid, wins in streams.items():
+        for w in wins:
+            a.submit(sid, w)
+            b.submit(sid, w)
+    ra = {(r.stream_id, r.seq): r.omega for r in a.drain()}
+    rb = {(r.stream_id, r.seq): r.omega for r in b.drain()}
+    assert ra.keys() == rb.keys()
+    for k in ra:
+        np.testing.assert_array_equal(ra[k], rb[k])
+
+
+# --- bookkeeping ---------------------------------------------------------------
+
+
+def test_padding_stats_and_executable_cache():
+    cam = small_camera()
+    svc = make_svc(cam, executor=InlineExecutor(), max_batch=4)
+    streams = ragged_streams(cam, 3, n_windows=2)
+    for sid, wins in streams.items():
+        for w in wins:
+            svc.submit(sid, w)
+    svc.drain()
+    assert svc.stats["windows"] == 6
+    assert svc.stats["compiles"] == len(svc._cache)
+    assert 0.0 <= svc.padded_slot_frac < 1.0
+    first = svc.stats["compiles"]
+    for sid, wins in streams.items():   # same shapes -> no new executables
+        for w in wins:
+            svc.submit(sid, w)
+    svc.drain()
+    assert svc.stats["compiles"] == first
+
+
+def test_latency_timestamps_on_fake_clock():
+    cam = small_camera()
+    clock = FakeClock(100.0)
+    ex = ManualExecutor()
+    svc = make_svc(cam, clock=clock, executor=ex, max_batch=1)
+    svc.submit("a", one_window(cam))
+    svc.poll()
+    clock.advance(0.25)
+    ex.release()
+    (r,) = svc.poll()
+    assert r.t_submit == 100.0 and r.t_done == 100.25
+    assert abs(r.latency - 0.25) < 1e-12

@@ -186,7 +186,10 @@ def test_train_step_lowers_on_mesh():
         M.SHAPES["tiny"] = M.ShapeSpec("tiny", 64, 8, "train")
         fn, args, meta = build_cell("llama3_2_1b", "tiny", mesh)
         compiled = fn.lower(*args).compile()
-        assert compiled.cost_analysis()["flops"] > 0
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # jax 0.4.x returns [dict]
+            cost = cost[0]
+        assert cost["flops"] > 0
         print("OK")
     """, devices=8)
     assert "OK" in out
