@@ -28,3 +28,8 @@ BENCH_SERVING_OUT=artifacts/BENCH_serving.json \
 
 python scripts/check_serving_baseline.py \
     BENCH_serving.json artifacts/BENCH_serving.json
+
+# Cost-model gate: shipped characterization tables must validate and the
+# calibrated paper profile must stay within +/-3 points of the paper's
+# headline ratios on the checked-in measured trace (pure arithmetic).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/check_profiles.py

@@ -8,11 +8,14 @@ from .contrast import (blur_separable, gaussian_taps, objective_direct,
                        objective_streaming, stats_to_objective,
                        streaming_stats)
 from .sorting import SortTables, retained_window, sort_events, stage_policy
-from .adaptive import GainThresholdController, gain, should_stay
+from .adaptive import (BudgetedGainThresholdController,
+                       GainThresholdController, gain, should_stay)
 from . import cgpr, energy
 from .pipeline import (WindowResult, estimate_batch, estimate_batch_donated,
-                       estimate_sequence, estimate_streams, estimate_window,
-                       estimate_windows_parallel, make_engine_pass)
+                       estimate_batch_budgeted, estimate_sequence,
+                       estimate_streams, estimate_window,
+                       estimate_window_budgeted, estimate_windows_parallel,
+                       make_engine_pass)
 
 __all__ = [
     "Camera", "CmaxConfig", "EventWindow", "StageConfig",
@@ -22,10 +25,11 @@ __all__ = [
     "blur_separable", "gaussian_taps", "objective_direct",
     "objective_streaming", "stats_to_objective", "streaming_stats",
     "SortTables", "retained_window", "sort_events", "stage_policy",
-    "GainThresholdController", "gain", "should_stay",
+    "BudgetedGainThresholdController", "GainThresholdController",
+    "gain", "should_stay",
     "cgpr", "energy",
     "WindowResult", "estimate_batch", "estimate_batch_donated",
-    "estimate_sequence",
-    "estimate_streams", "estimate_window", "estimate_windows_parallel",
-    "make_engine_pass",
+    "estimate_batch_budgeted", "estimate_sequence",
+    "estimate_streams", "estimate_window", "estimate_window_budgeted",
+    "estimate_windows_parallel", "make_engine_pass",
 ]

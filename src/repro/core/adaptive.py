@@ -13,6 +13,11 @@ two forms:
     framework does not consume it (the CMAX technique is inapplicable to LM
     training — DESIGN.md §Arch-applicability), but it is the paper's
     transferable control idea, tested standalone in tests/test_adaptive.py.
+  * `BudgetedGainThresholdController` — the budget-aware variant
+    (DESIGN.md §5): identical saturation logic, plus a *traced* per-run
+    iteration cap so a batch-level scheduler (costmodel.BudgetScheduler)
+    can spend an energy/latency budget across windows without recompiling —
+    the cap is data, not Python structure.
 """
 from __future__ import annotations
 
@@ -50,6 +55,40 @@ class GainThresholdController:
         def cond(carry):
             _, _, it, done = carry
             return (~done) & (it < self.max_iters)
+
+        def body(carry):
+            st, v_prev, it, _ = carry
+            st, v = step(st)
+            done = ~should_stay(v, v_prev, self.tau)
+            return (st, v, it + 1, done)
+
+        st, v, iters, _ = jax.lax.while_loop(
+            cond, body, (state, v0, jnp.int32(0), jnp.bool_(False)))
+        return st, v, iters
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetedGainThresholdController:
+    """`GainThresholdController` under an externally allocated budget.
+
+    `run(step, state, v0, iter_cap)` iterates while the gain stays >= tau,
+    up to min(max_iters, iter_cap). `max_iters` is static (it bounds the
+    compiled loop); `iter_cap` is a traced int32 scalar, so one compiled
+    executable serves every allocation the scheduler produces. A cap of 0
+    executes no iterations; schedulers normally grant a floor of 1.
+    """
+
+    tau: float
+    max_iters: int
+
+    def run(self, step: Callable, state, v0, iter_cap
+            ) -> Tuple[object, jax.Array, jax.Array]:
+        cap = jnp.minimum(jnp.int32(self.max_iters),
+                          jnp.asarray(iter_cap, jnp.int32))
+
+        def cond(carry):
+            _, _, it, done = carry
+            return (~done) & (it < cap)
 
         def body(carry):
             st, v_prev, it, _ = carry

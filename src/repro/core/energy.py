@@ -1,5 +1,5 @@
-"""Analytical memory-access / latency / energy model of the CMAX-CAMEL
-engine and its baseline (paper §5, Tables 2/3/5/6).
+"""Measured event statistics + the legacy face of the analytical
+access/latency/energy model (paper §5, Tables 2/3/5/6).
 
 The FPGA prototype is evaluated on three axes: effective memory accesses,
 processing latency, and system energy. None of these exist on a CPU/TPU
@@ -8,97 +8,33 @@ an analytical accounting model driven by *measured event statistics* that
 our JAX pipeline produces (active-group ratios, outlier ratios, pending-hit
 rates, per-stage pass counts from the adaptive controller).
 
-Model structure (per engine pass at stage s, window of N_s retained events,
-grid of P_s pixels, C = 4 channels, T = 4 taps):
-
-  accumulate path
-    baseline : every event performs read-modify-write on T taps x C
-               channels -> 2*T*C accesses/event to the IWE group; taps
-               serialize on the single-port SRAM (latency T cyc/event).
-    CAMEL    : banked voting (conflict-free, 1 cyc/event) + local
-               accumulation (only group commits + outliers reach memory) +
-               pending merge (address-matching commits coalesce) ->
-               effective updates = (1 - merge_reduction) * T*C per event,
-               each a write (registers absorb the read half of RMW).
-  blur path
-    baseline : write blurred images back (C*P_s), then a mean pass (P_s
-               reads) and a var/grad pass (C*P_s reads).
-    CAMEL    : streaming stats — no writeback, no re-read.
-    both     : read IWE group once (C*P_s) + clear (C*P_s writes);
-               line-buffer traffic C*P_s writes + C*P_s*k reads.
-  sorting (once per stage entry)
-    CAMEL    : count (N reads raw + 2N cnt RMW) + scan (2*P_s) +
-               permute (N reads + N rank RMW + n_ret perm writes).
-    baseline : same, but skipped at the full-resolution stage (paper §5.1:
-               sorting provides little benefit without local accumulation).
-
-Latency (cycles @ 200 MHz) per pass: max(event path, blur path) + fixed
-pipeline overhead; event path = N_s * cyc_per_event (1 CAMEL / T baseline,
-+RMW stall factor), blur path = P_s / 2 (2 px/clk) + writeback passes for
-the baseline.
-
-Energy: per-access energies and leakage from Table 5 (CACTI 45 nm), logic
-power from Table 4 (engine 42.78 mW of the 100.35 mW system; the baseline
-system runs the same SoC). E_total = E_mem_dyn + (P_logic + P_leak) * T.
-
-All constants are exposed in `HwParams` so the benchmarks can report
-sensitivity; defaults reproduce the paper's headline ratios (-53.3%
-latency, -42% accesses, -52.2% energy) within a few points, which we treat
-as validation of the model (EXPERIMENTS.md §Paper-validation).
+The accounting model itself lives in `repro.costmodel` (DESIGN.md §5),
+driven by loadable hardware characterization tables rather than literals;
+this module re-exports its API (`HwParams`, `Account`, `account_stage`,
+`account_window`, `load_profile`) as a thin shim, so `HwParams()` here is
+exactly `load_profile("paper_fpga_45nm")` — the table validated against
+the paper's headline ratios (-53.3% latency, -42% accesses, -52.2%
+energy). What stays here is what must be *measured* rather than modelled:
+`locality_stats`, the stage-wise locality measurement (Table 2) and
+lane-accurate pending-merge simulation (Table 3) over real event data.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Tuple
-
-import numpy as np
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
+from repro.costmodel.model import (Account, HwParams, MemGroup,  # noqa: F401
+                                   account_stage, account_window,
+                                   load_profile, pass_cost, sort_cost)
+
 from .geometry import warp_events
-from .sorting import SortTables, sort_events
-from .types import Camera, CmaxConfig, EventWindow, StageConfig
+from .sorting import sort_events
+from .types import Camera, EventWindow, StageConfig
 
 C_CH = 4      # channels: IWE + dIWE_xyz
-T_TAP = 4     # bilinear taps
-
-
-@dataclasses.dataclass(frozen=True)
-class MemGroup:
-    """One on-chip memory group (paper Table 5)."""
-    e_read_pj: float
-    e_write_pj: float
-    leak_mw: float
-    size_kb: int
-
-
-@dataclasses.dataclass(frozen=True)
-class HwParams:
-    freq_hz: float = 200e6
-    # Table 5 memory groups
-    iwe: MemGroup = MemGroup(11.26, 8.07, 12.39, 675)
-    raw: MemGroup = MemGroup(22.66, 21.44, 3.08, 156)
-    sort: MemGroup = MemGroup(9.71, 8.19, 10.19, 520)
-    line: MemGroup = MemGroup(9.18, 7.83, 1.43, 68)
-    # Table 4 logic power (45 nm synthesis), full prototype processor
-    logic_mw_camel: float = 100.35
-    # baseline engine lacks sorting/local-accum logic but the paper reports
-    # the same SoC envelope; its engine is slightly smaller
-    logic_mw_baseline: float = 95.0
-    # pipeline behavior. camel streams 1 event/cycle through the banked
-    # datapath; the baseline's 4 bilinear taps serialize on the dual-ported
-    # IWE SRAM (2 cyc) with a read-modify-write turnaround penalty —
-    # 2.7 cyc/event total, calibrated to the paper's 53.3% latency delta
-    # (the paper does not publish baseline per-event cycles; every other
-    # input of the model is measured from our pipeline traces)
-    camel_cyc_per_event: float = 1.0      # banked, conflict-free
-    base_cyc_per_event: float = 2.0       # 4 taps / 2 ports
-    base_rmw_stall: float = 1.35          # read-modify-write turnaround
-    blur_px_per_cyc: float = 2.0
-    pass_overhead_cyc: float = 64.0
-    sort_cyc_per_event: float = 2.0       # count + permute states
-    real_time_bound_s: float = 5.72e-3    # min window duration (poster)
+T_TAP = 4     # bilinear voting taps (profile key pipeline.vote_taps)
 
 
 # ----------------------------------------------------------------------
@@ -173,95 +109,3 @@ def locality_stats(ev: EventWindow, omega_sort: jax.Array,
         naive_updates=naive_updates,
     )
 
-
-# ----------------------------------------------------------------------
-# per-window accounting
-# ----------------------------------------------------------------------
-
-@dataclasses.dataclass
-class Account:
-    """Access counts per memory group + cycles, for one window."""
-    iwe_r: float = 0.0
-    iwe_w: float = 0.0
-    raw_r: float = 0.0
-    raw_w: float = 0.0
-    sort_r: float = 0.0
-    sort_w: float = 0.0
-    line_r: float = 0.0
-    line_w: float = 0.0
-    cycles: float = 0.0
-
-    @property
-    def total_accesses(self) -> float:
-        return (self.iwe_r + self.iwe_w + self.raw_r + self.raw_w
-                + self.sort_r + self.sort_w + self.line_r + self.line_w)
-
-    def energy_uj(self, hw: HwParams, camel: bool) -> Dict[str, float]:
-        t = self.cycles / hw.freq_hz
-        mem_dyn_pj = (self.iwe_r * hw.iwe.e_read_pj + self.iwe_w * hw.iwe.e_write_pj
-                      + self.raw_r * hw.raw.e_read_pj + self.raw_w * hw.raw.e_write_pj
-                      + self.sort_r * hw.sort.e_read_pj + self.sort_w * hw.sort.e_write_pj
-                      + self.line_r * hw.line.e_read_pj + self.line_w * hw.line.e_write_pj)
-        leak_mw = (hw.iwe.leak_mw + hw.raw.leak_mw + hw.sort.leak_mw
-                   + hw.line.leak_mw)
-        logic_mw = hw.logic_mw_camel if camel else hw.logic_mw_baseline
-        e_mem = mem_dyn_pj * 1e-6                  # pJ -> uJ
-        e_logic_leak = (logic_mw + leak_mw) * 1e-3 * t * 1e6  # W*s -> uJ
-        return dict(e_mem_rw_uj=e_mem, e_logic_leak_uj=e_logic_leak,
-                    e_total_uj=e_mem + e_logic_leak, latency_s=t)
-
-
-def account_stage(acc: Account, hw: HwParams, *, camel: bool, passes: float,
-                  n_ret: float, n_total: float, P: float, taps: int,
-                  merge_reduction: float, sort_this_stage: bool) -> None:
-    """Accumulate one stage's traffic+cycles into `acc` (in place)."""
-    # --- sorting (once per stage entry) ---
-    if sort_this_stage:
-        acc.raw_r += 2 * n_total                     # count + permute reads
-        acc.sort_r += 2 * n_total + P                # cnt RMW reads + scan
-        acc.sort_w += 2 * n_total + P + n_ret        # cnt/rank writes + perm
-        acc.cycles += hw.sort_cyc_per_event * n_total + P
-
-    for _ in range(int(round(passes))):
-        # --- event path: warp + vote + accumulate ---
-        acc.raw_r += n_ret
-        if camel:
-            ev_cyc = hw.camel_cyc_per_event * n_ret
-            acc.iwe_w += (1.0 - merge_reduction) * n_ret * C_CH * T_TAP
-        else:
-            ev_cyc = hw.base_cyc_per_event * hw.base_rmw_stall * n_ret
-            acc.iwe_r += n_ret * C_CH * T_TAP
-            acc.iwe_w += n_ret * C_CH * T_TAP
-        # --- blur path ---
-        acc.iwe_r += C_CH * P                        # read accumulated imgs
-        acc.iwe_w += C_CH * P                        # clear for next pass
-        # line buffers are FIFOs: each pixel is written once and read once
-        # per channel (the vertical taps tap the FIFO heads, not the SRAM)
-        acc.line_w += C_CH * P
-        acc.line_r += C_CH * P
-        blur_cyc = P / hw.blur_px_per_cyc
-        if not camel:
-            acc.iwe_w += C_CH * P                    # blurred writeback
-            acc.iwe_r += P + C_CH * P                # mean pass + var/grad
-            blur_cyc += 2 * P                        # extra passes
-        # accumulate and blur are sequential phases of a pass
-        acc.cycles += ev_cyc + blur_cyc + hw.pass_overhead_cyc
-
-
-def account_window(stage_stats: List[Dict[str, float]], cfg: CmaxConfig,
-                   hw: HwParams, *, camel: bool, n_total: int
-                   ) -> Tuple[Account, Dict[str, float]]:
-    """Full-window account. `stage_stats` has per-stage dicts with keys
-    passes, n_retained, P, taps, merge_reduction."""
-    acc = Account()
-    for si, st in enumerate(stage_stats):
-        is_full_res = (si == len(stage_stats) - 1
-                       and cfg.stages[si].scale >= 1.0)
-        sort_here = camel or not is_full_res   # baseline skips full-res sort
-        account_stage(
-            acc, hw, camel=camel, passes=st["passes"],
-            n_ret=st["n_retained"], n_total=n_total, P=st["P"],
-            taps=st["taps"],
-            merge_reduction=(st["merge_reduction"] if camel else 0.0),
-            sort_this_stage=sort_here)
-    return acc, acc.energy_uj(hw, camel)

@@ -80,9 +80,15 @@ def make_engine_pass(cam: Camera, stage: StageConfig,
 
 def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
                cam: Camera, stage: StageConfig, cfg: CmaxConfig,
-               stage_idx: int, engine: EnginePass
+               stage_idx: int, engine: EnginePass,
+               iter_cap: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, cgpr.CgprState, StageTrace]:
-    """Residence at one stage under Alg. 1 (or the fixed schedule)."""
+    """Residence at one stage under Alg. 1 (or the fixed schedule).
+
+    `iter_cap`, when given, is a traced int32 scalar bounding residence on
+    top of the static `max_iters` — the hook the budget scheduler
+    (costmodel, DESIGN.md §5) uses to spend an energy/latency budget
+    without recompiling per allocation."""
     tables = sort_events(ev, omega, cam, stage)
     weights = tables.weights
 
@@ -93,6 +99,11 @@ def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
         max_iters = stage.max_iters
     else:
         max_iters = int(cfg.fixed_iters[stage_idx])
+    if iter_cap is None:
+        cap = jnp.int32(max_iters)
+    else:
+        cap = jnp.minimum(jnp.int32(max_iters),
+                          jnp.asarray(iter_cap, jnp.int32))
 
     update = cgpr.step if cfg.use_cgpr else cgpr.gradient_ascent_step
     alpha0 = jnp.asarray(cfg.step_size * stage.step_scale, cfg.dtype)
@@ -108,7 +119,7 @@ def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
 
     def cond(carry):
         _, _, _, _, it, done, _, _ = carry
-        return (~done) & (it < max_iters)
+        return (~done) & (it < cap)
 
     def body(carry):
         st, v_prev, g, _unused, it, _, hist, alpha = carry
@@ -164,6 +175,48 @@ def estimate_window(ev: EventWindow, omega0: jax.Array,
                                           cfg, si, engine)
         traces.append(tr)
     return WindowResult(omega=omega, stages=tuple(traces))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def estimate_window_budgeted(ev: EventWindow, omega0: jax.Array,
+                             iter_caps: jax.Array, cfg: CmaxConfig
+                             ) -> WindowResult:
+    """`estimate_window` under a per-stage iteration allocation.
+
+    `iter_caps` is an (n_stages,) int32 array of caps from the budget
+    scheduler (costmodel.BudgetScheduler, DESIGN.md §5). Caps are traced
+    data: one executable serves every allocation. The adaptive gain test
+    still terminates a stage early — the cap only bounds how much a stage
+    is ALLOWED to iterate; caps >= stage.max_iters reproduce
+    `estimate_window` exactly."""
+    cam = cfg.camera
+    omega = omega0.astype(cfg.dtype)
+    opt_state = cgpr.init_state(3, cfg.dtype)
+    traces = []
+    for si, stage in enumerate(cfg.stages):
+        engine = make_engine_pass(cam, stage, cfg.dtype)
+        opt_state = cgpr.init_state(3, cfg.dtype)
+        omega, opt_state, tr = _run_stage(ev, omega, opt_state, cam, stage,
+                                          cfg, si, engine,
+                                          iter_cap=iter_caps[si])
+        traces.append(tr)
+    return WindowResult(omega=omega, stages=tuple(traces))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("omega0s",))
+def estimate_batch_budgeted(windows: EventWindow, omega0s: jax.Array,
+                            iter_caps: jax.Array, cfg: CmaxConfig
+                            ) -> WindowResult:
+    """Batched `estimate_batch_donated` under a per-window per-stage
+    iteration allocation: `iter_caps` is (B, n_stages) int32. The serving
+    layer dispatches QoS-budgeted batches through this entry point; like
+    the unbudgeted batch path, per-slot results depend only on that slot's
+    inputs, so warm-start chains survive arbitrary batch shapes."""
+    return jax.vmap(lambda x, y, t, p, v, o, c: estimate_window_budgeted(
+        EventWindow(x, y, t, p, v), o, c, cfg))(
+        windows.x, windows.y, windows.t, windows.p, windows.valid,
+        omega0s, iter_caps)
 
 
 def estimate_sequence(windows: EventWindow, omega_init: jax.Array,

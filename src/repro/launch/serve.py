@@ -10,6 +10,16 @@ the queue to drain, and per-request deadline/priority classes shed late
 windows instead of letting them stall the queue — the serving-time
 analogue of the paper's low-value-iteration suppression.
 
+Requests may additionally carry a QoS class (`QosClass`) with a
+per-window energy and/or modelled-latency budget: the service turns the
+budget into per-slot iteration caps via `costmodel.BudgetScheduler`
+(pooled across the batch's same-class windows, fed by each stream's
+measured Eq. 7 gain) and dispatches through the budgeted pipeline entry
+point — accuracy-per-joule as a serving knob (DESIGN.md §5):
+
+    # serve every window under a 150 uJ cost-model budget
+    PYTHONPATH=src python -m repro.launch.serve cmax --budget-uj 150
+
     # async continuous-batching CMAX service over synthetic ragged streams
     PYTHONPATH=src python -m repro.launch.serve cmax \
         --streams 4 --windows 4 --policy pow2
@@ -184,6 +194,27 @@ class ManualExecutor:
 
 
 @dataclasses.dataclass(frozen=True)
+class QosClass:
+    """Per-request service class: how much each window is allowed to cost.
+
+    Budgets are *modelled* per-window costs under the service's cost model
+    (costmodel.BudgetScheduler over an HwParams profile) — joules and/or
+    milliseconds of engine time, not wall time on this host. A class with
+    neither budget set ("standard") leaves the adaptive controller alone.
+    Within one dispatched batch, the budgets of same-class windows are
+    pooled, so a hard window can borrow iterations a saturated easy window
+    does not need (the scheduler spends where predicted gain/cost is
+    highest)."""
+    name: str
+    budget_uj: Optional[float] = None   # per-window energy budget
+    budget_ms: Optional[float] = None   # per-window modelled-latency budget
+
+    @property
+    def budgeted(self) -> bool:
+        return self.budget_uj is not None or self.budget_ms is not None
+
+
+@dataclasses.dataclass(frozen=True)
 class WindowRequest:
     """One queued estimation request: a single variable-length window."""
     stream_id: str
@@ -195,6 +226,7 @@ class WindowRequest:
     deadline: Optional[float] = None   # absolute clock time; None = no SLO
     t_submit: float = 0.0    # clock time of submission
     order: int = 0           # global arrival index (FIFO tiebreak)
+    qos: str = "standard"    # QosClass name (validated at submit)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,6 +240,7 @@ class WindowResponse:
     status: str = "ok"       # "ok" | "shed"
     t_submit: float = 0.0
     t_done: float = 0.0
+    qos: str = "standard"    # QosClass the request was served under
 
     @property
     def latency(self) -> float:
@@ -267,7 +300,8 @@ class AsyncBatchedEstimationService:
     """
 
     def __init__(self, cfg, policy=None, max_batch: int = 8, mesh=None,
-                 clock=None, executor=None, max_in_flight: int = 2):
+                 clock=None, executor=None, max_in_flight: int = 2,
+                 qos_classes=None, scheduler=None):
         from repro.data import events as ev_data
         self.cfg = cfg
         self.policy = policy or ev_data.pow2_policy(min_bucket=512)
@@ -276,32 +310,51 @@ class AsyncBatchedEstimationService:
         self.clock = clock or MonotonicClock()
         self.executor = executor or AsyncDispatchExecutor()
         self.max_in_flight = int(max_in_flight)
+        # QoS: "standard" always exists; extra classes carry energy/latency
+        # budgets enforced via per-slot iteration caps (DESIGN.md §5).
+        self.qos_classes: Dict[str, QosClass] = {
+            "standard": QosClass("standard")}
+        for q in (qos_classes or ()):
+            self.qos_classes[q.name] = q
+        self._scheduler = scheduler      # costmodel.BudgetScheduler (lazy)
+        if self.mesh is not None and any(q.budgeted
+                                         for q in self.qos_classes.values()):
+            raise ValueError("budgeted QoS classes are not supported with a "
+                             "mesh (estimate_batch_sharded has no budgeted "
+                             "variant yet)")
         self._queue: List[WindowRequest] = []   # arrival order
         self._seq: Dict[str, int] = {}
         self._warm: Dict[str, np.ndarray] = {}
+        self._gain: Dict[str, float] = {}       # measured Eq. 7 gain / stream
         self._busy: set = set()                 # streams with a window in flight
         self._inflight: Deque[_InFlight] = deque()
         self._ready: List[WindowResponse] = []
         self._order = 0
-        self._cache: Dict[Tuple[int, int], object] = {}
+        self._cache: Dict[Tuple[int, int, bool], object] = {}
         self.stats = {"windows": 0, "batches": 0, "compiles": 0,
                       "event_slots": 0, "raw_events": 0, "fill_slots": 0,
-                      "shed": 0}
+                      "shed": 0, "budgeted_windows": 0, "budget_spent_uj": 0.0}
 
     # -- request side --------------------------------------------------------
 
     def submit(self, stream_id: str, window, omega_hint=None,
-               priority: int = 0, deadline: Optional[float] = None) -> int:
+               priority: int = 0, deadline: Optional[float] = None,
+               qos: str = "standard") -> int:
         """Enqueue one window for `stream_id`; returns its sequence number.
 
         Windows of one stream must be submitted in time order; they are
         estimated in that order with warm-start chaining. `deadline` is an
         absolute time on the service clock: a request still queued past
-        its deadline is shed (status="shed") instead of computed.
+        its deadline is shed (status="shed") instead of computed. `qos`
+        names one of the service's QosClass entries; budgeted classes run
+        under scheduler-allocated iteration caps.
         """
         # bucketing at submit time rejects unservable sizes immediately —
         # a poison request must never sit in the queue
         bucket_n = self.policy.bucket_of(window.n)
+        if qos not in self.qos_classes:
+            raise ValueError(f"unknown QoS class {qos!r} "
+                             f"(have {sorted(self.qos_classes)})")
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
         hint = None if omega_hint is None else np.asarray(omega_hint,
@@ -309,7 +362,7 @@ class AsyncBatchedEstimationService:
         self._queue.append(WindowRequest(
             stream_id, seq, window, bucket_n, hint, int(priority),
             None if deadline is None else float(deadline),
-            self.clock.now(), self._order))
+            self.clock.now(), self._order, qos))
         self._order += 1
         return seq
 
@@ -322,11 +375,17 @@ class AsyncBatchedEstimationService:
 
     # -- executable cache ----------------------------------------------------
 
-    def _executable(self, bucket_n: int, batch_b: int):
-        """The compiled batch function for one (length, batch) class."""
-        from repro.core.pipeline import estimate_batch_donated
+    def _executable(self, bucket_n: int, batch_b: int,
+                    budgeted: bool = False):
+        """The compiled batch function for one (length, batch) class.
 
-        key = (bucket_n, batch_b)
+        Budgeted batches are a separate executable class (the iteration
+        caps are an extra traced (B, S) operand) — but caps are data, so
+        every allocation of that shape class shares one executable."""
+        from repro.core.pipeline import (estimate_batch_budgeted,
+                                         estimate_batch_donated)
+
+        key = (bucket_n, batch_b, budgeted)
         fn = self._cache.get(key)
         if fn is None:
             cfg = self.cfg
@@ -334,6 +393,9 @@ class AsyncBatchedEstimationService:
                 from repro.core.distributed import estimate_batch_sharded
                 mesh = self.mesh
                 fn = lambda w, o: estimate_batch_sharded(w, o, cfg, mesh)
+            elif budgeted:
+                fn = lambda w, o, caps: estimate_batch_budgeted(
+                    w, o, caps, cfg)
             else:
                 # module-level jitted with static cfg + donated warm-start
                 # buffer; executables are shared across service instances —
@@ -343,6 +405,50 @@ class AsyncBatchedEstimationService:
             self._cache[key] = fn
             self.stats["compiles"] += 1
         return fn
+
+    # -- QoS: budget -> per-slot iteration caps -------------------------------
+
+    def _budget_scheduler(self):
+        if self._scheduler is None:
+            from repro.costmodel import BudgetScheduler, load_profile
+            self._scheduler = BudgetScheduler(load_profile("paper_fpga_45nm"))
+        return self._scheduler
+
+    def _allocate_caps(self, batch: List[WindowRequest],
+                       batch_b: int) -> Optional[np.ndarray]:
+        """Per-slot iteration caps for one formed batch, or None when every
+        member is standard. Same-class budgets are pooled across the
+        batch's members; standard slots (and fill slots) are uncapped, so
+        mixed batches share one budgeted executable class."""
+        classes = {r.qos: self.qos_classes[r.qos] for r in batch}
+        if not any(q.budgeted for q in classes.values()):
+            return None
+        sched = self._budget_scheduler()
+        S = len(self.cfg.stages)
+        uncapped = max(int(s.max_iters) for s in self.cfg.stages)
+        caps = np.full((batch_b, S), uncapped, np.int32)
+        for name, q in classes.items():
+            if not q.budgeted:
+                continue
+            members = [(i, r) for i, r in enumerate(batch) if r.qos == name]
+            plans = [sched.plan_window(self.cfg, r.window.n,
+                                       gain0=self._gain.get(r.stream_id))
+                     for _, r in members]
+            alloc = sched.allocate(
+                plans,
+                budget_uj=None if q.budget_uj is None
+                else q.budget_uj * len(members),
+                budget_ms=None if q.budget_ms is None
+                else q.budget_ms * len(members))
+            for j, (i, _) in enumerate(members):
+                caps[i] = alloc.iters[j]
+            self.stats["budgeted_windows"] += len(members)
+            if np.isfinite(alloc.spent_uj):
+                self.stats["budget_spent_uj"] += alloc.spent_uj
+        # fill slots replicate the leader's data and are discarded — cap
+        # them at the 1-iteration floor so they buy no wasted refinement
+        caps[len(batch):, :] = 1
+        return caps
 
     # -- scheduling: shed / admit / launch ------------------------------------
 
@@ -358,7 +464,8 @@ class AsyncBatchedEstimationService:
                 om = self._warm.get(r.stream_id, np.zeros(3, np.float32))
                 self._ready.append(WindowResponse(
                     r.stream_id, r.seq, om, (), r.bucket_n, 0,
-                    status="shed", t_submit=r.t_submit, t_done=now))
+                    status="shed", t_submit=r.t_submit, t_done=now,
+                    qos=r.qos))
             else:
                 keep.append(r)
         self._queue = keep
@@ -396,6 +503,7 @@ class AsyncBatchedEstimationService:
             self._busy.add(r.stream_id)
 
         n_fill = batch_b - len(batch)
+        caps = self._allocate_caps(batch, batch_b)
         if getattr(self.executor, "needs_data", True):
             omega0 = [r.omega_hint if r.omega_hint is not None
                       else self._warm.get(r.stream_id,
@@ -408,7 +516,12 @@ class AsyncBatchedEstimationService:
         else:
             ev_batch = om_batch = None    # virtual-time simulation
 
-        fn = self._executable(bucket_n, batch_b)
+        fn = self._executable(bucket_n, batch_b, budgeted=caps is not None)
+        if caps is not None:
+            # the caps are per-dispatch data; close them over so every
+            # executor sees the uniform fn(ev, omega) submit signature
+            caps_arr = jnp.asarray(caps)
+            fn = (lambda _fn, _c: lambda w, o: _fn(w, o, _c))(fn, caps_arr)
         handle = self.executor.submit(fn, ev_batch, om_batch,
                                       bucket_n, batch_b)
         self._inflight.append(_InFlight(batch, handle, bucket_n, batch_b,
@@ -425,15 +538,28 @@ class AsyncBatchedEstimationService:
         res = self.executor.wait(fb.handle)
         now = self.clock.now()
         omegas = np.asarray(res.omega)
-        iters = [np.asarray(tr.iters) for tr in getattr(res, "stages", ())]
+        stages = getattr(res, "stages", ())
+        iters = [np.asarray(tr.iters) for tr in stages]
+        track_gain = any(q.budgeted for q in self.qos_classes.values())
+        if track_gain and stages:
+            v_ent = [np.asarray(tr.v_entry) for tr in stages]
+            v_fin = [np.asarray(tr.v_final) for tr in stages]
         for i, r in enumerate(fb.requests):
             om = omegas[i]
             self._warm[r.stream_id] = om
             self._busy.discard(r.stream_id)
+            if track_gain and stages:
+                # measured Eq. 7 gain per accepted iteration, averaged over
+                # stages — feeds the scheduler's gain model for this
+                # stream's NEXT window (closing measurement -> allocation)
+                g = [(vf[i] - ve[i]) / ((abs(ve[i]) + 1e-12)
+                                        * max(int(it[i]), 1))
+                     for ve, vf, it in zip(v_ent, v_fin, iters)]
+                self._gain[r.stream_id] = max(float(np.mean(g)), 0.0)
             self._ready.append(WindowResponse(
                 r.stream_id, r.seq, om, tuple(int(it[i]) for it in iters),
                 fb.bucket_n, fb.batch_b, status="ok",
-                t_submit=r.t_submit, t_done=now))
+                t_submit=r.t_submit, t_done=now, qos=r.qos))
         self.stats["windows"] += len(fb.requests)
 
     def _harvest(self, block: bool = False) -> bool:
@@ -676,12 +802,21 @@ def _run_cmax(args) -> None:
     else:
         policy = ev_data.single_policy(args.max_events)
 
+    budgeted = args.budget_uj is not None or args.budget_ms is not None
     if args.sync:
+        if budgeted:
+            raise SystemExit("--budget-uj/--budget-ms need the async "
+                             "service (drop --sync)")
         svc = BatchedEstimationService(cfg, policy=policy,
                                        max_batch=args.max_batch)
     else:
+        qos = []
+        if budgeted:
+            qos.append(QosClass("budgeted", budget_uj=args.budget_uj,
+                                budget_ms=args.budget_ms))
         svc = AsyncBatchedEstimationService(cfg, policy=policy,
-                                            max_batch=args.max_batch)
+                                            max_batch=args.max_batch,
+                                            qos_classes=qos)
 
     # synthetic ragged workload: S streams x K windows, log-uniform lengths
     truth = {}
@@ -697,7 +832,8 @@ def _run_cmax(args) -> None:
         truth[f"s{s}"] = np.asarray(om_true)
         for k, w in enumerate(ragged):
             svc.submit(f"s{s}", w,
-                       omega_hint=np.asarray(om_true[0]) if k == 0 else None)
+                       omega_hint=np.asarray(om_true[0]) if k == 0 else None,
+                       **({"qos": "budgeted"} if budgeted else {}))
 
     n_req = svc.pending()
     t0 = time.perf_counter()
@@ -718,6 +854,11 @@ def _run_cmax(args) -> None:
         p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))]
         print(f"latency p50={1e3 * p50:.1f}ms p99={1e3 * p99:.1f}ms "
               f"shed={svc.stats['shed']}")
+        if budgeted:
+            per_w = svc.stats["budget_spent_uj"] / max(
+                svc.stats["budgeted_windows"], 1)
+            print(f"budgeted_windows={svc.stats['budgeted_windows']} "
+                  f"modelled spend={per_w:.2f} uJ/window")
     print(f"rmse vs ground truth: "
           f"{float(np.sqrt(np.mean(np.square(errs)))):.4f} rad/s")
 
@@ -783,6 +924,12 @@ def main(argv=None):
     cm.add_argument("--policy", choices=["pow2", "single"], default="pow2")
     cm.add_argument("--sync", action="store_true",
                     help="use the synchronous FIFO-drain baseline")
+    cm.add_argument("--budget-uj", type=float, default=None,
+                    help="per-window energy budget (uJ, paper_fpga_45nm "
+                         "cost model) — serves everything under a "
+                         "budgeted QoS class")
+    cm.add_argument("--budget-ms", type=float, default=None,
+                    help="per-window modelled-latency budget (ms)")
 
     lm = sub.add_parser("lm", help="LM prefill + batched decode demo")
     lm.add_argument("--arch", required=True)
