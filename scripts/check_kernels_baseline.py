@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Gate a fresh BENCH_kernels.json against the checked-in baseline.
+
+    python scripts/check_kernels_baseline.py BENCH_kernels.json \
+        artifacts/BENCH_kernels.json
+
+Gates (exit 1 on violation), per megakernel_* entry in the artifact:
+
+  * equivalence — megakernel-vs-reference engine pass rel. error below
+    EQUIV_TOL (the interpret-mode numerical-equivalence contract);
+  * spill — measured spill rate must be exactly 0 (capacity sizing is
+    part of the shipped configuration, a spill is silent data loss);
+  * traffic — analytic HBM-traffic ratio vs the unfused kernel pair must
+    stay <= 1 (fusion must never cost traffic), and the ratio vs the
+    scatter baseline must not regress more than RATIO_SLACK above the
+    checked-in baseline value for the same kernel.
+
+Only structural quantities are gated — interpret-mode wall times are
+recorded in the artifact but are not TPU-representative, so they carry
+no gate.
+"""
+import json
+import sys
+
+EQUIV_TOL = 1e-4
+RATIO_SLACK = 1.05     # new scatter-ratio <= 1.05x baseline scatter-ratio
+
+
+def main(baseline_path: str, artifact_path: str) -> None:
+    with open(baseline_path) as f:
+        base = json.load(f)["kernels"]
+    with open(artifact_path) as f:
+        new = json.load(f)["kernels"]
+
+    mks = sorted(k for k in new if k.startswith("megakernel_"))
+    if not mks:
+        sys.exit("kernels gate: artifact has no megakernel_* entries")
+    for name in mks:
+        ent = new[name]
+        err = ent["max_rel_err_vs_reference"]
+        if err >= EQUIV_TOL:
+            sys.exit(f"kernels gate: {name} megakernel-vs-reference "
+                     f"equivalence broken (rel_err={err:.2e} >= "
+                     f"{EQUIV_TOL})")
+        if ent["spill_rate"] != 0.0:
+            sys.exit(f"kernels gate: {name} spilled taps "
+                     f"(spill_rate={ent['spill_rate']:.4%}); capacity "
+                     "sizing regressed")
+        r_uf = ent["traffic_ratio_vs_unfused"]
+        if r_uf > 1.0:
+            sys.exit(f"kernels gate: {name} HBM traffic exceeds the "
+                     f"unfused dataflow (ratio={r_uf:.3f} > 1)")
+        r_sc = ent["traffic_ratio_vs_scatter"]
+        if name in base:
+            floor = RATIO_SLACK * base[name]["traffic_ratio_vs_scatter"]
+            if r_sc > floor:
+                sys.exit(f"kernels gate: {name} traffic ratio vs scatter "
+                         f"regressed ({r_sc:.3f} > {RATIO_SLACK:.2f}x "
+                         f"baseline "
+                         f"{base[name]['traffic_ratio_vs_scatter']:.3f})")
+        print(f"kernels gate: {name} ok — rel_err {err:.2e}, spill 0, "
+              f"traffic vs scatter {r_sc:.2f}, vs unfused {r_uf:.2f}, "
+              f"roofline_fraction {ent['roofline_fraction']:.2f}")
+    print(f"kernels gate ok: {len(mks)} megakernel configs checked")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    main(sys.argv[1], sys.argv[2])

@@ -29,6 +29,17 @@ BENCH_SERVING_OUT=artifacts/BENCH_serving.json \
 python scripts/check_serving_baseline.py \
     BENCH_serving.json artifacts/BENCH_serving.json
 
+# Kernel suite: Pallas kernels + the batched megakernel. Writes the
+# roofline/equivalence artifact, then gates megakernel-vs-reference
+# equivalence, zero spill, and the no-regression floor on the analytic
+# interpret-mode HBM-traffic ratios (see scripts/check_kernels_baseline.py).
+BENCH_KERNELS_OUT=artifacts/BENCH_kernels.json \
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --only kernels
+
+python scripts/check_kernels_baseline.py \
+    BENCH_kernels.json artifacts/BENCH_kernels.json
+
 # Cost-model gate: shipped characterization tables must validate and the
 # calibrated paper profile must stay within +/-3 points of the paper's
 # headline ratios on the checked-in measured trace (pure arithmetic).

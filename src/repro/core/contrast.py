@@ -86,13 +86,16 @@ def streaming_stats(channels: jax.Array, taps: jax.Array) -> jax.Array:
 
 def stats_to_objective(stats: jax.Array, num_pixels: int
                        ) -> Tuple[jax.Array, jax.Array]:
-    """Eq. 12: Var = S2/P - (S1/P)^2;  dC/dw_j = 2/P (G_j - S1*T_j/P)."""
+    """Eq. 12: Var = S2/P - (S1/P)^2;  dC/dw_j = 2/P (G_j - S1*T_j/P).
+
+    `stats` is an (..., 8) stack — a single (8,) vector or the (B, 8)
+    output of the batched megakernel; leading axes broadcast through."""
     P = float(num_pixels)
-    S1, S2 = stats[0], stats[1]
-    G = stats[2:5]
-    T = stats[5:8]
+    S1, S2 = stats[..., 0], stats[..., 1]
+    G = stats[..., 2:5]
+    T = stats[..., 5:8]
     var = S2 / P - (S1 / P) ** 2
-    grad = (2.0 / P) * (G - S1 * T / P)
+    grad = (2.0 / P) * (G - S1[..., None] * T / P)
     return var, grad
 
 

@@ -60,22 +60,80 @@ EnginePass = Callable[[EventWindow, jax.Array, jax.Array],
                       Tuple[jax.Array, jax.Array]]
 
 
-def make_engine_pass(cam: Camera, stage: StageConfig,
-                     dtype=jnp.float32) -> EnginePass:
+def make_engine_pass(cam: Camera, stage: StageConfig, dtype=jnp.float32,
+                     engine: str = "reference", *, capacity: int = 4096,
+                     interpret: bool = True) -> EnginePass:
     """One full engine pass at stage s: warp+vote+accumulate (IWE & dIWE),
     streaming blur statistics, Eq. 12 objective + gradient.
 
-    Returns fn(ev, weights, omega) -> (variance, grad(3,)).
+    `engine` selects the backend (types.ENGINES): "reference" is the
+    pure-jnp oracle datapath; "pallas" (and, per-window, "pallas_batched")
+    routes through the fused Pallas kernel path. Returns
+    fn(ev, weights, omega) -> (variance, grad(3,)).
     """
-    taps = gaussian_taps(stage.blur_taps, stage.blur_sigma, dtype)
     Hs, Ws = stage.grid(cam)
 
-    def engine(ev: EventWindow, weights: jax.Array, omega: jax.Array):
+    if engine in ("pallas", "pallas_batched"):
+        # lazy import: kernels -> core.{contrast,geometry,iwe,types} must
+        # not re-enter core/__init__ while it is still executing
+        from repro.kernels import fused_engine_pass
+
+        def kernel_engine(ev: EventWindow, weights: jax.Array,
+                          omega: jax.Array):
+            v, g, _spilled = fused_engine_pass(
+                ev, omega, cam, stage.scale, stage.blur_taps,
+                stage.blur_sigma, weights=weights, capacity=capacity,
+                interpret=interpret)
+            return v, g
+
+        return kernel_engine
+
+    taps = gaussian_taps(stage.blur_taps, stage.blur_sigma, dtype)
+
+    def reference_engine(ev: EventWindow, weights: jax.Array,
+                         omega: jax.Array):
         channels = build_iwe(ev, omega, cam, stage.scale, weights=weights)
         stats = streaming_stats(channels, taps)
         return stats_to_objective(stats, Hs * Ws)
 
-    return engine
+    return reference_engine
+
+
+def make_batched_engine_pass(cam: Camera, stage: StageConfig,
+                             cfg: CmaxConfig):
+    """Whole-batch engine pass: fn(ev (B,N), weights (B,N), omega (B,3))
+    -> (variance (B,), grad (B,3)).
+
+    Under engine="pallas_batched" this is the megakernel — ONE pallas_call
+    whose grid carries the batch axis (kernels/megakernel.py); other
+    engines vmap their per-window pass (the grid, if any, never sees the
+    batch axis — the baseline the megakernel exists to beat)."""
+    if cfg.engine == "pallas_batched":
+        from repro.kernels import batched_engine_pass
+
+        def megakernel_engine(ev: EventWindow, weights: jax.Array,
+                              omega: jax.Array):
+            v, g, _spilled = batched_engine_pass(
+                ev, omega, cam, stage.scale, stage.blur_taps,
+                stage.blur_sigma, weights=weights, rb=cfg.engine_rb,
+                capacity=cfg.engine_capacity,
+                interpret=cfg.engine_interpret, dtype=cfg.dtype)
+            return v, g
+
+        return megakernel_engine
+
+    per_window = make_engine_pass(cam, stage, cfg.dtype, engine=cfg.engine,
+                                  capacity=cfg.engine_capacity,
+                                  interpret=cfg.engine_interpret)
+    return jax.vmap(per_window, in_axes=(0, 0, 0))
+
+
+def _make_engine_for(cfg: CmaxConfig, cam: Camera,
+                     stage: StageConfig) -> EnginePass:
+    """Per-window engine honouring the config's backend selection."""
+    return make_engine_pass(cam, stage, cfg.dtype, engine=cfg.engine,
+                            capacity=cfg.engine_capacity,
+                            interpret=cfg.engine_interpret)
 
 
 def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
@@ -118,11 +176,11 @@ def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
     # accepted or not, costs one engine pass and is counted as one.
 
     def cond(carry):
-        _, _, _, _, it, done, _, _ = carry
+        _, _, _, it, done, _, _ = carry
         return (~done) & (it < cap)
 
     def body(carry):
-        st, v_prev, g, _unused, it, _, hist, alpha = carry
+        st, v_prev, g, it, _, hist, alpha = carry
         om, ost = st
         om_p, ost_p = update(om, g, ost, alpha)      # propose
         v_p, g_p = engine(ev, weights, om_p)         # one engine pass
@@ -142,13 +200,13 @@ def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
         done_stuck = (~improved) & (alpha < alpha_floor) if cfg.adaptive \
             else jnp.bool_(False)
         v_prev = jnp.where(improved, v_p, v_prev)
-        return ((om, ost), v_prev, g, 0, it + 1, done_ok | done_stuck,
+        return ((om, ost), v_prev, g, it + 1, done_ok | done_stuck,
                 hist, alpha)
 
     hist0 = jnp.full((max_iters,), jnp.nan, dtype=v_entry.dtype)
-    (om, ost), v_fin, _, _, iters, _, hist, _ = jax.lax.while_loop(
+    (om, ost), v_fin, _, iters, _, hist, _ = jax.lax.while_loop(
         cond, body,
-        ((omega, opt_state), v_entry, g_entry, 0, jnp.int32(0),
+        ((omega, opt_state), v_entry, g_entry, jnp.int32(0),
          jnp.bool_(False), hist0, alpha0))
 
     trace = StageTrace(iters=iters, passes=iters + 1,
@@ -158,16 +216,133 @@ def _run_stage(ev: EventWindow, omega: jax.Array, opt_state: cgpr.CgprState,
     return om, ost, trace
 
 
+def _masked_select(mask: jax.Array, new, old):
+    """Per-leaf `where` with a (B,) mask broadcast over trailing axes."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(
+            mask.reshape(mask.shape + (1,) * (n.ndim - 1)), n, o), new, old)
+
+
+def _run_stage_batched(ev: EventWindow, omega: jax.Array,
+                       opt_state: cgpr.CgprState, cam: Camera,
+                       stage: StageConfig, cfg: CmaxConfig, stage_idx: int,
+                       engine_b, iter_cap: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, cgpr.CgprState, StageTrace]:
+    """`_run_stage` for a whole (B,·) batch in masked lockstep.
+
+    The batched megakernel computes ALL windows' engine passes in one
+    pallas_call, so the residence loop cannot be an independent per-window
+    while_loop under vmap — instead one shared while_loop keeps iterating
+    until every window is done, with finished windows contributing masked
+    no-ops (exactly the carry-select semantics JAX's vmap-of-while_loop
+    batching rule produces, so traces match the vmapped reference
+    bit-for-bit). `iter_cap`, when given, is (B,) int32."""
+    B = omega.shape[0]
+    tables = jax.vmap(lambda x, y, t, p, vl, om: sort_events(
+        EventWindow(x, y, t, p, vl), om, cam, stage))(
+        ev.x, ev.y, ev.t, ev.p, ev.valid, omega)
+    weights = tables.weights                              # (B, N)
+
+    v_entry, g_entry = engine_b(ev, weights, omega)       # (B,), (B, 3)
+
+    if cfg.adaptive:
+        max_iters = stage.max_iters
+    else:
+        max_iters = int(cfg.fixed_iters[stage_idx])
+    if iter_cap is None:
+        cap = jnp.full((B,), max_iters, jnp.int32)
+    else:
+        cap = jnp.minimum(jnp.int32(max_iters),
+                          jnp.asarray(iter_cap, jnp.int32))
+
+    update = jax.vmap(cgpr.step if cfg.use_cgpr
+                      else cgpr.gradient_ascent_step)
+    alpha0 = jnp.asarray(cfg.step_size * stage.step_scale, cfg.dtype)
+    alpha_floor = alpha0 / 64.0
+    rows = jnp.arange(B)
+
+    def cond(carry):
+        _, _, _, it, done, _, _ = carry
+        return jnp.any((~done) & (it < cap))
+
+    def body(carry):
+        st, v_prev, g, it, done, hist, alpha = carry
+        active = (~done) & (it < cap)                     # (B,)
+        om, ost = st
+        om_p, ost_p = update(om, g, ost, alpha)           # propose (all B)
+        v_p, g_p = engine_b(ev, weights, om_p)            # ONE kernel launch
+        it_c = jnp.clip(it, 0, max_iters - 1)
+        hist = hist.at[rows, it_c].set(
+            jnp.where(active, v_p, hist[rows, it_c]))
+        improved = v_p > v_prev
+        om_n = _masked_select(improved, om_p, om)
+        ost_n = _masked_select(improved, ost_p, ost)
+        g_n = _masked_select(improved, g_p, g)
+        if cfg.adaptive:
+            g_norm = (v_p - v_prev) / jnp.maximum(jnp.abs(v_prev), 1e-12)
+            done_ok = improved & (g_norm < stage.tau)
+        else:
+            done_ok = jnp.zeros((B,), bool)
+        alpha_n = jnp.where(improved, alpha, alpha * 0.5)
+        done_stuck = (~improved) & (alpha_n < alpha_floor) if cfg.adaptive \
+            else jnp.zeros((B,), bool)
+        v_prev_n = jnp.where(improved, v_p, v_prev)
+        # finished windows keep their carry verbatim (masked no-op)
+        new = ((om_n, ost_n), v_prev_n, g_n, it + 1,
+               done_ok | done_stuck, hist, alpha_n)
+        return _masked_select(active, new, carry)
+
+    hist0 = jnp.full((B, max_iters), jnp.nan, dtype=v_entry.dtype)
+    (om, ost), v_fin, _, iters, _, hist, _ = jax.lax.while_loop(
+        cond, body,
+        ((omega, opt_state), v_entry, g_entry,
+         jnp.zeros((B,), jnp.int32), jnp.zeros((B,), bool), hist0,
+         jnp.full((B,), alpha0, cfg.dtype)))
+
+    trace = StageTrace(iters=iters, passes=iters + 1,
+                       n_retained=tables.n_retained, v_final=v_fin,
+                       v_entry=v_entry, v_history=hist,
+                       omega_entry=omega, omega_exit=om)
+    return om, ost, trace
+
+
+def _estimate_batch_lockstep(windows: EventWindow, omega0s: jax.Array,
+                             cfg: CmaxConfig,
+                             iter_caps: Optional[jax.Array] = None
+                             ) -> WindowResult:
+    """Whole-batch estimation through the batched engine pass: every engine
+    pass of every stage is ONE megakernel launch covering the full batch."""
+    cam = cfg.camera
+    B = omega0s.shape[0]
+    omega = omega0s.astype(cfg.dtype)
+    traces = []
+    for si, stage in enumerate(cfg.stages):
+        engine_b = make_batched_engine_pass(cam, stage, cfg)
+        # CG restarts at each stage, as in the per-window path.
+        opt_state = jax.vmap(lambda _: cgpr.init_state(3, cfg.dtype))(
+            jnp.arange(B))
+        omega, opt_state, tr = _run_stage_batched(
+            windows, omega, opt_state, cam, stage, cfg, si, engine_b,
+            iter_cap=None if iter_caps is None else iter_caps[:, si])
+        traces.append(tr)
+    return WindowResult(omega=omega, stages=tuple(traces))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def estimate_window(ev: EventWindow, omega0: jax.Array,
                     cfg: CmaxConfig) -> WindowResult:
     """Estimate the rotation rate for one event window (warm-started)."""
+    if cfg.engine == "pallas_batched":
+        # B=1 batch through the megakernel path, squeezed back to scalars.
+        res = _estimate_batch_lockstep(
+            jax.tree.map(lambda a: a[None], ev), omega0[None], cfg)
+        return jax.tree.map(lambda a: jnp.squeeze(a, 0), res)
     cam = cfg.camera
     omega = omega0.astype(cfg.dtype)
     opt_state = cgpr.init_state(3, cfg.dtype)
     traces = []
     for si, stage in enumerate(cfg.stages):
-        engine = make_engine_pass(cam, stage, cfg.dtype)
+        engine = _make_engine_for(cfg, cam, stage)
         # CG history does not transfer across resolutions (the objective
         # surface changes scale) — restart CG at each stage, as HW does.
         opt_state = cgpr.init_state(3, cfg.dtype)
@@ -189,12 +364,17 @@ def estimate_window_budgeted(ev: EventWindow, omega0: jax.Array,
     still terminates a stage early — the cap only bounds how much a stage
     is ALLOWED to iterate; caps >= stage.max_iters reproduce
     `estimate_window` exactly."""
+    if cfg.engine == "pallas_batched":
+        res = _estimate_batch_lockstep(
+            jax.tree.map(lambda a: a[None], ev), omega0[None], cfg,
+            iter_caps=iter_caps[None])
+        return jax.tree.map(lambda a: jnp.squeeze(a, 0), res)
     cam = cfg.camera
     omega = omega0.astype(cfg.dtype)
     opt_state = cgpr.init_state(3, cfg.dtype)
     traces = []
     for si, stage in enumerate(cfg.stages):
-        engine = make_engine_pass(cam, stage, cfg.dtype)
+        engine = _make_engine_for(cfg, cam, stage)
         opt_state = cgpr.init_state(3, cfg.dtype)
         omega, opt_state, tr = _run_stage(ev, omega, opt_state, cam, stage,
                                           cfg, si, engine,
@@ -208,11 +388,15 @@ def estimate_window_budgeted(ev: EventWindow, omega0: jax.Array,
 def estimate_batch_budgeted(windows: EventWindow, omega0s: jax.Array,
                             iter_caps: jax.Array, cfg: CmaxConfig
                             ) -> WindowResult:
-    """Batched `estimate_batch_donated` under a per-window per-stage
+    """Batched `estimate_window_budgeted` (with the warm-start buffer
+    donated, like `estimate_batch_donated`) under a per-window per-stage
     iteration allocation: `iter_caps` is (B, n_stages) int32. The serving
     layer dispatches QoS-budgeted batches through this entry point; like
     the unbudgeted batch path, per-slot results depend only on that slot's
     inputs, so warm-start chains survive arbitrary batch shapes."""
+    if cfg.engine == "pallas_batched":
+        return _estimate_batch_lockstep(windows, omega0s, cfg,
+                                        iter_caps=iter_caps)
     return jax.vmap(lambda x, y, t, p, v, o, c: estimate_window_budgeted(
         EventWindow(x, y, t, p, v), o, c, cfg))(
         windows.x, windows.y, windows.t, windows.p, windows.valid,
@@ -238,8 +422,14 @@ def estimate_sequence(windows: EventWindow, omega_init: jax.Array,
 
 def estimate_windows_parallel(windows: EventWindow, omega0s: jax.Array,
                               cfg: CmaxConfig) -> WindowResult:
-    """vmap over independent windows (no warm-start chaining) — the
-    building block for data-parallel multi-device CMAX (distributed.py)."""
+    """Batched estimation of independent windows (no warm-start chaining) —
+    the building block for data-parallel multi-device CMAX (distributed.py).
+
+    Under engine="pallas_batched" the whole batch runs in masked lockstep
+    with one megakernel launch per engine pass; otherwise each window's
+    pipeline is vmapped independently."""
+    if cfg.engine == "pallas_batched":
+        return _estimate_batch_lockstep(windows, omega0s, cfg)
     return jax.vmap(lambda x, y, t, p, v, o: estimate_window(
         EventWindow(x, y, t, p, v), o, cfg))(
         windows.x, windows.y, windows.t, windows.p, windows.valid, omega0s)
@@ -297,6 +487,23 @@ def estimate_streams(windows: EventWindow, omega_inits: jax.Array,
     of `estimate_sequence` with the throughput of `estimate_batch`.
     Returns (omegas (S, K, 3), stacked traces).
     """
+    if cfg.engine == "pallas_batched":
+        # scan over the K window positions; at each step the S concurrent
+        # streams are one megakernel batch. Per-slot independence of the
+        # lockstep path keeps each stream's warm-start chain identical to
+        # running it alone (tests/test_megakernel_properties.py pins it).
+        def scan_fn(omega_s, win_slice):
+            res = _estimate_batch_lockstep(EventWindow(*win_slice),
+                                           omega_s, cfg)
+            return res.omega, res
+
+        leaves = tuple(jnp.swapaxes(a, 0, 1) for a in (
+            windows.x, windows.y, windows.t, windows.p, windows.valid))
+        _, results = jax.lax.scan(scan_fn, omega_inits.astype(cfg.dtype),
+                                  leaves)
+        results = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), results)
+        return results.omega, results
+
     def one_stream(x, y, t, p, v, omega0):
         return estimate_sequence(EventWindow(x, y, t, p, v), omega0, cfg)
 

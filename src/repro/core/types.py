@@ -89,6 +89,18 @@ class StageConfig:
         return cam.grid(self.scale)
 
 
+#: Selectable engine-pass backends (CmaxConfig.engine):
+#:   "reference"      — the pure-jnp scatter + blur_separable datapath (the
+#:                      correctness oracle; XLA fuses it reasonably on CPU)
+#:   "pallas"         — per-window fused Pallas kernels (iwe_accum +
+#:                      blur_stats); batching is vmap over windows
+#:   "pallas_batched" — the batched megakernel: one (batch, slab)-grid
+#:                      pallas_call per engine pass for the WHOLE batch
+#:                      (kernels/megakernel.py); the hot loop runs windows
+#:                      in masked lockstep
+ENGINES = ("reference", "pallas", "pallas_batched")
+
+
 @dataclasses.dataclass(frozen=True)
 class CmaxConfig:
     """Full pipeline configuration (paper-faithful defaults).
@@ -97,6 +109,16 @@ class CmaxConfig:
     3/5/9-tap Gaussian kernels, keep-ratio rho_s = s, and empirically chosen
     thresholds. `adaptive=False` reproduces the fixed-schedule baseline
     (each stage runs exactly `fixed_iters` iterations).
+
+    `engine` selects the engine-pass backend (see ENGINES); it threads
+    through make_engine_pass / estimate_window / estimate_batch* so the
+    serving layer (launch/serve.py) and the sharded twins
+    (core/distributed.py) pick the backend up with zero call-site changes.
+    The remaining engine_* fields are kernel knobs: `engine_capacity` is
+    the per-(window, slab) tap budget of the batched megakernel (and the
+    per-tile budget of the per-window kernels), `engine_rb` the row-slab
+    height, `engine_interpret` runs the kernels in interpret mode (the
+    only option on CPU; set False on real TPUs).
     """
 
     camera: Camera = Camera()
@@ -113,6 +135,15 @@ class CmaxConfig:
     step_size: float = 0.08                       # CG-PR step scale
     use_cgpr: bool = True                         # False -> plain grad ascent
     dtype: jnp.dtype = jnp.float32
+    engine: str = "reference"                     # one of ENGINES
+    engine_capacity: int = 4096                   # per-(window, slab) taps
+    engine_rb: int = 8                            # megakernel row-slab height
+    engine_interpret: bool = True                 # Pallas interpret mode
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
 
     @property
     def n_stages(self) -> int:

@@ -62,11 +62,27 @@ SCHEMA: Dict[str, Dict[str, type]] = {
 # meta keys that MAY appear (provenance notes); everything else is a typo
 _META_OPTIONAL = {"technology", "calibration"}
 
+# sections that MAY appear. `roofline` carries the chip-level machine
+# balance (peak compute, HBM/interconnect bandwidth, HBM capacity in
+# bytes) that roofline/analysis.py sources its HW constants from — only
+# accelerator-class profiles ship it; the FPGA/ASIC tables have no
+# meaningful "peak FLOP/s" and omit it.
+OPTIONAL_SECTIONS: Dict[str, Dict[str, type]] = {
+    "roofline": {
+        "peak_flops": float,      # FLOP/s per chip (bf16 where relevant)
+        "hbm_bw": float,          # B/s per chip
+        "link_bw": float,         # B/s per interconnect link
+        "hbm_per_chip": float,    # bytes
+    },
+}
+
 # keys that must be strictly positive once validated
 _POSITIVE = {("pipeline", k) for k in ("freq_hz", "camel_cyc_per_event",
                                        "base_cyc_per_event", "base_rmw_stall",
                                        "blur_px_per_cyc", "vote_taps",
-                                       "channels")}
+                                       "channels")} \
+    | {("roofline", k) for k in ("peak_flops", "hbm_bw", "link_bw",
+                                 "hbm_per_chip")}
 
 
 class ProfileError(ValueError):
@@ -179,10 +195,14 @@ def validate(sections: Dict[str, Dict[str, object]], origin: str = "profile"
     accepted for float keys coerced to float)."""
     out: Dict[str, Dict[str, object]] = {}
     for sec in sections:
-        if sec not in SCHEMA:
-            raise UnknownKeyError(f"{origin}: unknown section {sec!r} "
-                                  f"(expected one of {sorted(SCHEMA)})")
-    for sec, keys in SCHEMA.items():
+        if sec not in SCHEMA and sec not in OPTIONAL_SECTIONS:
+            raise UnknownKeyError(
+                f"{origin}: unknown section {sec!r} (expected one of "
+                f"{sorted(set(SCHEMA) | set(OPTIONAL_SECTIONS))})")
+    required = dict(SCHEMA)
+    required.update({sec: keys for sec, keys in OPTIONAL_SECTIONS.items()
+                     if sec in sections})
+    for sec, keys in required.items():
         if sec not in sections:
             raise MissingSectionError(f"{origin}: missing section {sec!r}")
         body = sections[sec]

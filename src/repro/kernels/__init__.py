@@ -1,7 +1,12 @@
-# Kernel layer: the two compute hot-spots the paper optimizes in hardware,
+# Kernel layer: the compute hot-spots the paper optimizes in hardware,
 # re-derived as Pallas TPU kernels (see DESIGN.md §2 for the mapping).
-from .ops import IweAccumOut, blur_stats, fused_engine_pass, iwe_accum
+# The batched megakernel fuses the whole engine pass — warp, vote,
+# accumulate, blur, stats — into one (batch, slab)-grid pallas_call.
+from .ops import (BatchedEngineOut, IweAccumOut, batched_engine_pass,
+                  batched_engine_stats, blur_stats, fused_engine_pass,
+                  iwe_accum)
 from . import ref
 
-__all__ = ["IweAccumOut", "blur_stats", "fused_engine_pass", "iwe_accum",
-           "ref"]
+__all__ = ["BatchedEngineOut", "IweAccumOut", "batched_engine_pass",
+           "batched_engine_stats", "blur_stats", "fused_engine_pass",
+           "iwe_accum", "ref"]

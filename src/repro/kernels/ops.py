@@ -1,12 +1,17 @@
 """jit'd public wrappers around the Pallas kernels.
 
-`iwe_accum` : host-side tap expansion + tile sort + capacity packing
-              (the Alg.-3 analogue at VMEM-tile granularity), then the
-              tile_accumulate kernel, then spatial reassembly.
-`blur_stats`: pad + lane-align the channel stack, then the streaming
-              blur/statistics kernel.
+`iwe_accum`           : host-side tap expansion + tile sort + capacity
+                        packing (the Alg.-3 analogue at VMEM-tile
+                        granularity), then the tile_accumulate kernel,
+                        then spatial reassembly.
+`blur_stats`          : pad + lane-align the channel stack, then the
+                        streaming blur/statistics kernel.
+`batched_engine_pass` : the batched megakernel — slab-binning prologue
+                        (Alg. 3 at row-slab granularity, vmapped over the
+                        batch) + ONE (batch, slab)-grid pallas_call fusing
+                        warp/vote/accumulate/blur/stats, then Eq. 12.
 
-Both default to interpret=True (this container is CPU-only; TPU is the
+All default to interpret=True (this container is CPU-only; TPU is the
 compile target). The oracles live in ref.py; tests sweep shapes/dtypes.
 """
 from __future__ import annotations
@@ -24,6 +29,7 @@ from repro.core.types import Camera, EventWindow
 
 from .blur_stats import blur_stats_streaming
 from .iwe_accum import tile_accumulate
+from .megakernel import megakernel_stats
 
 
 class IweAccumOut(NamedTuple):
@@ -151,3 +157,127 @@ def fused_engine_pass(ev: EventWindow, omega: jax.Array, cam: Camera,
     stats = blur_stats(acc.channels, num_taps, sigma, interpret=interpret)
     var, grad = stats_to_objective(stats, Hs * Ws)
     return var, grad, acc.spilled
+
+
+# ---------------------------------------------------------------------------
+# Batched megakernel wrappers
+# ---------------------------------------------------------------------------
+
+
+class BatchedEngineOut(NamedTuple):
+    stats: jax.Array     # (B, 8) f32 Eq. 12 running sums per window
+    spilled: jax.Array   # (B,) int32 — contributing taps dropped by capacity
+
+
+def _bin_taps_one(ev: EventWindow, omega: jax.Array, weights: jax.Array,
+                  cam: Camera, scale: float, rb: int, n_slabs: int,
+                  cap: int):
+    """Slab-binning prologue for one window (vmapped over the batch):
+    expand the 4 bilinear taps, bin contributing taps by destination row
+    slab (floor row // rb) and pack each slab's records into CAP slots —
+    the Alg.-3 pixel-group sort at the megakernel's tile granularity.
+    Zero-weight taps (subsampling-dropped or out-of-range events) carry
+    identically-zero deltas, so they are routed to the dump slab instead
+    of burning capacity."""
+    N = ev.n
+    w = warp_events(ev, omega, cam, scale)
+    dt = ev.t - ev.t_ref
+    pw = ev.p.astype(jnp.float32) * weights.astype(jnp.float32)
+    contributing = w.in_range & (pw != 0.0)
+
+    rows, taps_c = [], []
+    for ti, (dy, _dx) in enumerate(TAP_OFFSETS):
+        rows.append(w.y0 + dy)
+        taps_c.append(jnp.full((N,), ti, jnp.int32))
+    row = jnp.concatenate(rows)                          # (4N,)
+    tapc = jnp.concatenate(taps_c)
+    live = jnp.concatenate([contributing] * 4)
+    ex = jnp.tile(ev.x.astype(jnp.float32), 4)
+    ey = jnp.tile(ev.y.astype(jnp.float32), 4)
+    edt = jnp.tile(dt.astype(jnp.float32), 4)
+    epw = jnp.tile(pw, 4)
+
+    slab = jnp.where(live, row // rb, n_slabs)
+    order = jnp.argsort(slab, stable=True)
+    slab_s = slab[order]
+    cnt = jax.ops.segment_sum(jnp.ones_like(slab_s), slab_s,
+                              num_segments=n_slabs + 1)[:n_slabs]
+    offset = jnp.concatenate([jnp.zeros((1,), cnt.dtype),
+                              jnp.cumsum(cnt)[:-1]])
+    slot = offset[:, None] + jnp.arange(cap)[None, :]    # (NS, CAP)
+    in_cap = jnp.arange(cap)[None, :] < cnt[:, None]
+    src = jnp.clip(slot, 0, 4 * N - 1).astype(jnp.int32)
+
+    g = lambda a, fill: jnp.where(in_cap, a[order][src], fill)
+    packed = (g(ex, 0.0), g(ey, 0.0), g(edt, 0.0), g(epw, 0.0),
+              g(tapc, -1).astype(jnp.int32))
+    spilled = jnp.sum(jnp.maximum(cnt - cap, 0)).astype(jnp.int32)
+    return packed, spilled
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cam", "scale", "num_taps", "sigma", "rb", "capacity",
+                     "chunk", "interpret", "dtype"))
+def batched_engine_stats(ev: EventWindow, omega: jax.Array, cam: Camera,
+                         scale: float, num_taps: int, sigma: float,
+                         weights: Optional[jax.Array] = None,
+                         rb: int = 8, capacity: int = 4096,
+                         chunk: int = 512, interpret: bool = True,
+                         dtype=jnp.float32) -> BatchedEngineOut:
+    """Full batched engine pass -> (B, 8) Eq. 12 stats in ONE pallas_call.
+
+    `ev` arrays are (B, N) with padded slots carrying valid=False; `omega`
+    is (B, 3). `capacity` is the fixed per-(window, slab) tap budget (the
+    HW outlier-FIFO-depth analogue, rounded up to a whole number of MXU
+    chunks); `spilled` reports dropped contributing taps per window —
+    callers size capacity so it stays 0 (tests + the CI kernel gate
+    assert it)."""
+    Hs, Ws = cam.grid(scale)
+    k = num_taps
+    half = k // 2
+    n_slabs = _ceil_div(Hs + half, rb)
+    Wp = _ceil_to(Ws + half, 128)
+    cap = _ceil_to(max(capacity, chunk), chunk)
+    if weights is None:
+        weights = jnp.ones_like(ev.x, dtype=jnp.float32)
+
+    packed, spilled = jax.vmap(
+        lambda x, y, t, p, v, om, wt: _bin_taps_one(
+            EventWindow(x, y, t, p, v), om, wt, cam, scale, rb, n_slabs,
+            cap))(ev.x, ev.y, ev.t, ev.p, ev.valid,
+                  omega.astype(jnp.float32), weights)
+    ex, ey, edt, epw, tapc = packed                      # (B, NS, CAP) each
+
+    fir = gaussian_taps(k, sigma, jnp.float32)
+    stats = megakernel_stats(
+        ex, ey, edt, epw, tapc, omega.astype(jnp.float32), fir,
+        cap=cap, chunk=chunk, rb=rb, k=k, H=Hs, W=Ws, Wp=Wp,
+        n_slabs=n_slabs, scale=scale, fx=cam.fx, fy=cam.fy, cx=cam.cx,
+        cy=cam.cy, dtype=dtype, interpret=interpret)
+    return BatchedEngineOut(stats=stats, spilled=spilled)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cam", "scale", "num_taps", "sigma", "rb", "capacity",
+                     "chunk", "interpret", "dtype"))
+def batched_engine_pass(ev: EventWindow, omega: jax.Array, cam: Camera,
+                        scale: float, num_taps: int, sigma: float,
+                        weights: Optional[jax.Array] = None,
+                        rb: int = 8, capacity: int = 4096,
+                        chunk: int = 512, interpret: bool = True,
+                        dtype=jnp.float32):
+    """Batched megakernel engine pass -> (variance (B,), grad (B, 3),
+    spilled (B,)) — the drop-in batched replacement for
+    pipeline.make_engine_pass on a whole window batch."""
+    out = batched_engine_stats(ev, omega, cam, scale, num_taps, sigma,
+                               weights=weights, rb=rb, capacity=capacity,
+                               chunk=chunk, interpret=interpret, dtype=dtype)
+    Hs, Ws = cam.grid(scale)
+    var, grad = stats_to_objective(out.stats, Hs * Ws)
+    return var, grad, out.spilled

@@ -792,10 +792,13 @@ class BatchedEstimationService:
 
 
 def _run_cmax(args) -> None:
+    import dataclasses as _dc
+
     from repro.core import CmaxConfig
     from repro.data import events as ev_data
 
-    cfg = CmaxConfig()
+    cfg = _dc.replace(CmaxConfig(), engine=args.engine,
+                      engine_capacity=args.engine_capacity)
     cam = cfg.camera
     if args.policy == "pow2":
         policy = ev_data.pow2_policy(min_bucket=args.min_bucket)
@@ -911,6 +914,8 @@ def _run_lm(args) -> None:
 
 
 def main(argv=None):
+    from repro.core.types import ENGINES
+
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     sub = ap.add_subparsers(dest="mode", required=True)
 
@@ -922,6 +927,15 @@ def main(argv=None):
     cm.add_argument("--min-bucket", type=int, default=1024)
     cm.add_argument("--max-batch", type=int, default=8)
     cm.add_argument("--policy", choices=["pow2", "single"], default="pow2")
+    cm.add_argument("--engine", choices=list(ENGINES), default="reference",
+                    help="engine-pass backend: reference (jnp oracle), "
+                         "pallas (per-window fused kernels), or "
+                         "pallas_batched (one megakernel launch per batch "
+                         "engine pass)")
+    cm.add_argument("--engine-capacity", type=int, default=4096,
+                    help="per-(window, slab) tap budget of the Pallas "
+                         "engines; size it so the benchmark spill rate "
+                         "stays 0 (see BENCH_kernels.json)")
     cm.add_argument("--sync", action="store_true",
                     help="use the synchronous FIFO-drain baseline")
     cm.add_argument("--budget-uj", type=float, default=None,

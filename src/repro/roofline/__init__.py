@@ -1,5 +1,9 @@
 from .analysis import (HW, analytic_flops, analytic_hbm_bytes,
+                       cmax_megakernel_costs, cmax_scatter_costs,
+                       cmax_unfused_costs, default_hw, kernel_roofline,
                        roofline_terms, summarize_cell)
 
-__all__ = ["HW", "analytic_flops", "analytic_hbm_bytes", "roofline_terms",
-           "summarize_cell"]
+__all__ = ["HW", "analytic_flops", "analytic_hbm_bytes",
+           "cmax_megakernel_costs", "cmax_scatter_costs",
+           "cmax_unfused_costs", "default_hw", "kernel_roofline",
+           "roofline_terms", "summarize_cell"]

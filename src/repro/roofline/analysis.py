@@ -4,8 +4,19 @@
     memory term     = HBM bytes / (chips * HBM_bw)
     collective term = collective bytes / (chips * link_bw)
 
-Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
-(constants per the brief).
+Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+The constants are sourced from the costmodel profile registry (the
+`[roofline]` section of `costmodel/profiles/tpu_v5e_estimate.toml`) via
+`HW.from_profile` / `default_hw()`; the dataclass defaults remain as a
+last-resort fallback so the module works even if the profile is removed.
+
+Besides the model-estimation roofline (the three-term per-cell analysis
+below), this module carries the CMAX-KERNEL mode: analytic FLOPs/bytes
+for the Pallas engine-pass kernels (megakernel, per-window fused pair,
+and the scatter reference dataflow) plus `kernel_roofline`, which turns
+(flops, hbm_bytes, seconds) into achieved-vs-roofline fractions. The
+kernel benchmark suite (benchmarks/kernels.py) persists these into
+BENCH_kernels.json and scripts/check_kernels_baseline.py gates on them.
 
 FLOPs/bytes sources. XLA's `compiled.cost_analysis()` counts while-loop
 bodies ONCE (we verified: a 16-layer scanned model reports ~1/16 of the
@@ -19,6 +30,7 @@ that is NOT derivable analytically without replicating GSPMD's decisions).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 from pathlib import Path
@@ -34,6 +46,32 @@ class HW:
     hbm_bw: float = 819e9             # B/s / chip
     link_bw: float = 50e9             # B/s / link (ICI)
     hbm_per_chip: float = 16 * 2**30  # v5e: 16 GiB
+
+    @classmethod
+    def from_profile(cls, name_or_path: str = "tpu_v5e_estimate") -> "HW":
+        """Build HW from a costmodel profile's `[roofline]` section.
+
+        Raises ProfileError if the profile has no roofline section (only
+        accelerator-class profiles carry one)."""
+        from repro.costmodel.profiles import ProfileError, read_profile_dict
+        prof = read_profile_dict(name_or_path)
+        if "roofline" not in prof:
+            raise ProfileError(
+                f"profile {name_or_path!r} has no [roofline] section")
+        r = prof["roofline"]
+        return cls(peak_flops=r["peak_flops"], hbm_bw=r["hbm_bw"],
+                   link_bw=r["link_bw"], hbm_per_chip=r["hbm_per_chip"])
+
+
+@functools.lru_cache(maxsize=1)
+def default_hw() -> HW:
+    """The default machine balance: the tpu_v5e_estimate profile, falling
+    back to the HW dataclass defaults if the profile cannot be loaded
+    (e.g. no TOML parser in the environment)."""
+    try:
+        return HW.from_profile("tpu_v5e_estimate")
+    except Exception:
+        return HW()
 
 
 # ----------------------------------------------------------------------
@@ -192,7 +230,8 @@ def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeSpec,
 
 def roofline_terms(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
                    collective_total_bytes: float,
-                   hw: HW = HW()) -> Dict[str, float]:
+                   hw: Optional[HW] = None) -> Dict[str, float]:
+    hw = hw or default_hw()
     fl = analytic_flops(cfg, shape)
     flops = fl["total"]
     hbm = analytic_hbm_bytes(cfg, shape, n_chips)
@@ -220,9 +259,10 @@ def roofline_terms(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
                               if k in ("attn", "ffn", "moe", "rnn", "head")})
 
 
-def summarize_cell(rec: dict, hw: HW = HW()) -> Optional[dict]:
+def summarize_cell(rec: dict, hw: Optional[HW] = None) -> Optional[dict]:
     """Merge a dry-run JSON record with the analytic roofline."""
     from repro.configs import get_config
+    hw = hw or default_hw()
     if rec.get("status") != "ok":
         return None
     arch = rec["arch"]
@@ -242,3 +282,99 @@ def summarize_cell(rec: dict, hw: HW = HW()) -> Optional[dict]:
             + terms["arg_bytes_per_dev"]) <= hw.hbm_per_chip
     terms["fits_hbm"] = bool(fits)
     return terms
+
+
+# ----------------------------------------------------------------------
+# CMAX-kernel mode: analytic FLOPs / HBM bytes per engine-pass kernel
+# ----------------------------------------------------------------------
+# Accounting conventions (all per WINDOW per ENGINE PASS, f32 = 4 bytes):
+#
+#   * "hbm_bytes" is the traffic the dataflow REQUIRES to cross the HBM
+#     boundary — kernel operands in, kernel results out, plus any image
+#     materialized between kernels. VMEM-resident accumulators (the whole
+#     point of the fused kernels) contribute nothing.
+#   * "flops" counts the arithmetic the kernel actually issues, including
+#     the dense one-hot MXU contraction (its zeros are real issued MACs —
+#     that is the price of turning scatter-RMW into systolic work, and the
+#     quantity to compare against the MXU roofline).
+#   * The scatter reference has no dense contraction: its vote is 4 taps x
+#     4 channels of read-modify-write, so it is bandwidth-bound by
+#     construction; we charge each RMW a read+write of one f32 (the
+#     no-cache worst case the paper's banked-SRAM design removes).
+
+_F32 = 4.0
+_CHANNELS = 4          # IWE + 3 derivative images
+_VOTE_TAPS = 4         # bilinear footprint
+_WARP_FLOPS = 30.0     # Alg. 2: rotation, projection, scale, floor/frac
+
+
+def cmax_megakernel_costs(Hs: int, Ws: int, n_slabs: int, cap: int,
+                          k: int, rb: int, Wp: int) -> Dict[str, float]:
+    """Batched megakernel, one window's share of one engine pass.
+
+    HBM in: the packed per-slab tap records (5 f32 planes of `cap` slots
+    per slab) + omega + FIR taps; HBM out: the (8,) stats vector. All
+    intermediate state (slab accumulators, line buffer, running sums)
+    lives in VMEM across the fused stages."""
+    slots = float(n_slabs) * cap
+    hbm_read = 5.0 * slots * _F32 + 3 * _F32 + k * _F32
+    hbm_write = 8.0 * _F32
+    slab_px = float(rb) * Wp
+    flops_warp = _WARP_FLOPS * slots
+    flops_vote = 2.0 * slots * slab_px * _CHANNELS      # one-hot MXU dot
+    flops_blur = 2.0 * (2 * k) * _CHANNELS * slab_px * n_slabs  # horiz+vert
+    flops_stats = 12.0 * slab_px * n_slabs
+    return dict(flops=flops_warp + flops_vote + flops_blur + flops_stats,
+                hbm_bytes=hbm_read + hbm_write)
+
+
+def cmax_unfused_costs(Hs: int, Ws: int, n_events: int, cap_total: int,
+                       k: int, Wp: int) -> Dict[str, float]:
+    """Per-window kernel pair (iwe_accum then blur_stats): same arithmetic
+    family as the megakernel, but the (4, Hs, Wp) channel stack crosses
+    HBM between the two pallas_calls (write + read back)."""
+    img_bytes = _CHANNELS * Hs * Wp * _F32
+    slots = float(cap_total)
+    hbm = 5.0 * slots * _F32 + 3 * _F32 + k * _F32 \
+        + 2.0 * img_bytes + 8.0 * _F32
+    px = float(Hs) * Wp
+    flops = _WARP_FLOPS * slots + 2.0 * slots * px * _CHANNELS / max(
+        1, (Hs + k // 2 + 7) // 8) \
+        + 2.0 * (2 * k) * _CHANNELS * px + 12.0 * px
+    return dict(flops=flops, hbm_bytes=hbm)
+
+
+def cmax_scatter_costs(Hs: int, Ws: int, n_events: int,
+                       k: int) -> Dict[str, float]:
+    """Reference jnp dataflow: stream events, scatter-RMW 4 taps x 4
+    channels into an HBM-resident image, then blur + reduce it. The
+    baseline the fused kernels' traffic ratio is measured against."""
+    px = float(Hs) * Ws
+    ev = float(n_events)
+    hbm = 4.0 * ev * _F32 \
+        + ev * _VOTE_TAPS * _CHANNELS * 2.0 * _F32 \
+        + _CHANNELS * px * _F32 * 4.0 + 8.0 * _F32
+    flops = _WARP_FLOPS * ev + ev * _VOTE_TAPS * _CHANNELS * 2.0 \
+        + 2.0 * (2 * k) * _CHANNELS * px + 12.0 * px
+    return dict(flops=flops, hbm_bytes=hbm)
+
+
+def kernel_roofline(flops: float, hbm_bytes: float,
+                    seconds: Optional[float] = None,
+                    hw: Optional[HW] = None) -> Dict[str, float]:
+    """Roofline placement of one kernel: arithmetic intensity vs the ridge
+    point, the bandwidth-capped FLOP/s bound, and (when a measured time is
+    given) the achieved fraction of that bound."""
+    hw = hw or default_hw()
+    intensity = flops / max(hbm_bytes, 1.0)
+    ridge = hw.peak_flops / hw.hbm_bw
+    bound_flops = min(hw.peak_flops, intensity * hw.hbm_bw)
+    out = dict(flops=flops, hbm_bytes=hbm_bytes,
+               arithmetic_intensity=intensity, ridge_point=ridge,
+               roofline_fraction=min(1.0, intensity / ridge),
+               roofline_flops=bound_flops)
+    if seconds is not None and seconds > 0:
+        achieved = flops / seconds
+        out["achieved_flops"] = achieved
+        out["achieved_fraction"] = achieved / bound_flops
+    return out
