@@ -16,7 +16,16 @@ service (DESIGN.md §Serving). Two parts:
    windows/sec, shed rate, and padding overhead per bucket policy, for
    the async service and a sync FIFO-drain baseline.
 
+Both parts run once per serving workload plugin: the CMAX event-window
+workload (top-level keys, back-compat with older baselines) and the LM
+chunked-decode workload (`repro.serving.LMDecodeWorkload` on the smoke
+transformer, under the `"lm"` key — its drain race gates on EXACT token
+equality against the sequential unbatched chain, since int argmax
+predictions admit no tolerance).
+
 Scale knobs (environment):
+  SERVING_BENCH_WORKLOADS comma list of workload arms to run
+                          (default "cmax,lm")
   SERVING_BENCH_STREAMS   simulated streams        (default 1000; CI smoke.
                           Raise to 100000/1000000 locally — the DES is
                           pure Python over requests, no device work.)
@@ -43,8 +52,10 @@ import jax.numpy as jnp
 from .common import emit, time_call
 from repro.core import CmaxConfig, estimate_batch
 from repro.data import events as ev_data
+from repro.data import lm as lm_data
 from repro.launch.serve import (AsyncBatchedEstimationService,
                                 BatchedEstimationService, FakeClock)
+from repro.serving import LMDecodeWorkload
 
 N_STREAMS = 8            # drain race: real streams
 N_WINDOWS = 4            # drain race: windows per stream
@@ -52,6 +63,12 @@ MIN_EVENTS, MAX_EVENTS = 1200, 4096
 MAX_BATCH = 4
 DEADLINE_BATCHES = 3.0   # SLO: this many full-batch service times
 HI_PRIO_FRAC = 0.1       # fraction of simulated windows in the hi class
+
+LM_ARCH = "llama3.2-1b"  # smoke config (repro.configs.get_smoke_config)
+LM_STREAMS = 4           # LM drain race: real streams
+LM_CHUNKS = 2            # chunks per stream
+LM_MIN_TOK, LM_MAX_TOK = 6, 24
+LM_MAX_LEN = 64          # carried-cache capacity >= LM_CHUNKS * LM_MAX_TOK
 
 
 def _repo_root() -> str:
@@ -227,12 +244,18 @@ class SimExecutor:
 
     needs_data = False
 
-    def __init__(self, clock: FakeClock, svc_time: Callable[[int, int],
-                                                            float]):
+    def __init__(self, clock: FakeClock,
+                 svc_time: Callable[[int, int], float],
+                 null_result: Callable[[int, int], object] = None):
         self.clock = clock
         self.svc_time = svc_time
+        # workload.null_result(bucket_n, batch_b): the placeholder the
+        # plugin's harvest() can consume; default is the CMAX shape
+        self._null = null_result or (
+            lambda bucket_n, batch_b: types.SimpleNamespace(
+                omega=np.zeros((batch_b, 3), np.float32), stages=()))
         self._done_at: Dict[int, float] = {}
-        self._batch_b: Dict[int, int] = {}
+        self._shape: Dict[int, Tuple[int, int]] = {}
         self._free = 0.0        # when the simulated device next idles
         self._next = 0
         self.busy_s = 0.0
@@ -245,7 +268,7 @@ class SimExecutor:
         self._free = start + dt
         self.busy_s += dt
         self._done_at[h] = self._free
-        self._batch_b[h] = batch_b
+        self._shape[h] = (bucket_n, batch_b)
         return h
 
     def done(self, handle) -> bool:
@@ -253,9 +276,7 @@ class SimExecutor:
 
     def wait(self, handle):
         self.clock.advance_to(self._done_at[handle])
-        return types.SimpleNamespace(
-            omega=np.zeros((self._batch_b[handle], 3), np.float32),
-            stages=())
+        return self._null(*self._shape[handle])
 
     def next_completion(self) -> float:
         now = self.clock.now()
@@ -264,35 +285,45 @@ class SimExecutor:
 
 
 def _trace(svc_time, policy, n_streams: int, n_requests: int, util: float,
-           seed: int):
+           seed: int, n_min: int = MIN_EVENTS, n_max: int = MAX_EVENTS):
     """One open-loop Poisson arrival trace: the offered load is `util` x
     the calibrated full-batch capacity, so the trace shape is machine-
     independent even though absolute times are not."""
     rng = np.random.default_rng(seed)
-    lens = rng.integers(MIN_EVENTS, MAX_EVENTS + 1, n_requests)
+    lens = rng.integers(n_min, n_max + 1, n_requests)
     per_window = float(np.mean([svc_time(policy.bucket_of(int(L)), MAX_BATCH)
                                 / MAX_BATCH for L in lens[:512]]))
     rate = util / per_window                      # windows/s offered
     t_arr = np.cumsum(rng.exponential(1.0 / rate, n_requests))
     streams = rng.integers(0, n_streams, n_requests)
     hi = rng.random(n_requests) < HI_PRIO_FRAC
-    deadline_s = DEADLINE_BATCHES * svc_time(policy.bucket_of(MAX_EVENTS),
+    deadline_s = DEADLINE_BATCHES * svc_time(policy.bucket_of(n_max),
                                              MAX_BATCH)
     return t_arr, lens, streams, hi, deadline_s
 
 
-def _des_async(policy, svc_time, trace, n_streams: int) -> dict:
-    """Drive the real AsyncBatchedEstimationService in virtual time."""
+def _des_async(policy, svc_time, trace, n_streams: int,
+               workload=None) -> dict:
+    """Drive the real AsyncBatchedEstimationService in virtual time —
+    with the default CMAX workload, or any plugin (its null_result feeds
+    the plugin's own harvest, so the full admission/refill/shed/harvest
+    path runs untouched)."""
     t_arr, lens, streams, hi, deadline_s = trace
     n = len(t_arr)
     clock = FakeClock()
-    ex = SimExecutor(clock, svc_time)
+    ex = SimExecutor(clock, svc_time,
+                     null_result=workload.null_result if workload else None)
     # dispatch depth 2 (the production default): deeper windows would
     # just move queue wait into un-sheddable device backlog — a request
     # already dispatched is never shed, so SLO control needs the queue
-    svc = AsyncBatchedEstimationService(
-        CmaxConfig(), policy=policy, max_batch=MAX_BATCH, clock=clock,
-        executor=ex, max_in_flight=2)
+    if workload is not None:
+        svc = AsyncBatchedEstimationService(
+            workload=workload, max_batch=MAX_BATCH, clock=clock,
+            executor=ex, max_in_flight=2)
+    else:
+        svc = AsyncBatchedEstimationService(
+            CmaxConfig(), policy=policy, max_batch=MAX_BATCH, clock=clock,
+            executor=ex, max_in_flight=2)
     responses: List = []
     i = 0
     while i < n or svc.in_flight() or svc.pending():
@@ -372,6 +403,162 @@ def _metrics(responses, n_streams: int, span_end: float,
 
 
 # ---------------------------------------------------------------------------
+# LM workload arm: same two parts through the LMDecodeWorkload plugin
+# ---------------------------------------------------------------------------
+
+
+def _lm_streams(cfg) -> Dict[str, List[lm_data.TokenChunk]]:
+    dcfg = lm_data.LMDataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                global_batch=1, seed=7)
+    return lm_data.token_streams(dcfg, LM_STREAMS, LM_CHUNKS,
+                                 LM_MIN_TOK, LM_MAX_TOK, seed=7)
+
+
+def _lm_submit_all(svc, streams) -> int:
+    n = 0
+    for sid, chunks in streams.items():
+        for c in chunks:
+            svc.submit(sid, c)
+            n += 1
+    return n
+
+
+def _lm_reference(wl, streams) -> Dict[Tuple[str, int], np.ndarray]:
+    """Sequential batch-1 chain through the plugin's own machinery —
+    carried KV cache, one chunk at a time. Predictions are int argmax, so
+    the service must match it EXACTLY, not within a tolerance."""
+    ref = {}
+    for sid, chunks in streams.items():
+        state = wl.default_state()
+        for k, c in enumerate(chunks):
+            b = wl.bucket_of(c)
+            data, sb, _ = wl.make_batch([c], [state], b, 1)
+            res = wl.executable(b, 1, donate=False)(data, sb)
+            out, state, _, _ = wl.harvest(res, False)(0)
+            ref[(sid, k)] = np.asarray(out)
+    return ref
+
+
+def _lm_drain_race(wl, streams) -> dict:
+    try:
+        cores = len(os.sched_getaffinity(0))
+    except AttributeError:
+        cores = os.cpu_count() or 1
+    depth = 2 if cores > 1 else 1
+    services = {
+        "sync": BatchedEstimationService(workload=wl, max_batch=MAX_BATCH),
+        "async": AsyncBatchedEstimationService(workload=wl,
+                                               max_batch=MAX_BATCH,
+                                               max_in_flight=depth),
+    }
+    n_tok = sum(c.n for chunks in streams.values() for c in chunks)
+    for svc in services.values():   # cold pass compiles every shape class
+        _lm_submit_all(svc, streams)
+        svc.drain()
+    rates = {name: [] for name in services}
+    last = {}
+    for _ in range(3):              # interleaved reps, median (as cmax)
+        for name, svc in services.items():
+            svc._warm.clear()       # restart every carried-cache chain
+            n = _lm_submit_all(svc, streams)
+            t0 = time.perf_counter()
+            responses = svc.drain()
+            rates[name].append(n_tok / (time.perf_counter() - t0))
+            last[name] = responses
+            assert len(responses) == n
+    tps_sync = float(np.median(rates["sync"]))
+    tps_async = float(np.median(rates["async"]))
+
+    ref = _lm_reference(wl, streams)
+    mismatched = 0
+    for responses in last.values():
+        for r in responses:
+            # warm-pass seqs continue past the cold pass: chunk index is
+            # seq mod LM_CHUNKS (the cache chain was reset between passes)
+            if not np.array_equal(np.asarray(r.omega),
+                                  ref[(r.stream_id, r.seq % LM_CHUNKS)]):
+                mismatched += 1
+
+    out = dict(sync_tok_per_s=tps_sync, async_tok_per_s=tps_async,
+               speedup=tps_async / tps_sync, mismatched_chunks=mismatched,
+               exact=mismatched == 0, max_in_flight=depth)
+    emit("serving_lm_drain_race", 0.0,
+         f"sync_tps={tps_sync:.1f};async_tps={tps_async:.1f};"
+         f"speedup={out['speedup']:.3f}")
+    emit("serving_lm_equivalence", 0.0, f"mismatched_chunks={mismatched}")
+    assert mismatched == 0, \
+        f"{mismatched} served chunks deviate from the sequential LM chain"
+    return out
+
+
+def _lm_calibrate(wl, policies) -> Dict[Tuple[int, int], float]:
+    """Measured decode time (seconds) per (token class, batch class) at
+    the corners batch=1 and batch=MAX_BATCH, through the plugin's own
+    executable — exactly what the scheduler dispatches."""
+    classes = sorted({c for p in policies.values()
+                      for c in p.classes(LM_MIN_TOK, LM_MAX_TOK)})
+    rng = np.random.default_rng(11)
+    table: Dict[Tuple[int, int], float] = {}
+    for n in classes:
+        c = lm_data.TokenChunk(
+            rng.integers(0, wl.cfg.vocab_size, n).astype(np.int32))
+        for b in (1, MAX_BATCH):
+            data, sb, _ = wl.make_batch([c], [wl.default_state()], n, b)
+            fn = wl.executable(n, b, donate=False)
+            us = time_call(lambda fn=fn, data=data, sb=sb: fn(data, sb),
+                           iters=3, warmup=1)
+            table[(n, b)] = us / 1e6
+    return table
+
+
+def _lm_section(n_streams: int, n_requests: int, util: float) -> dict:
+    """The full LM arm: drain race, calibration, Poisson DES."""
+    from repro.configs import get_smoke_config
+
+    cfg = get_smoke_config(LM_ARCH)
+    policies = {
+        "pow2": lm_data.chunk_policy(min_bucket=8, max_bucket=64),
+        "single": ev_data.single_policy(32),
+    }
+    wl = LMDecodeWorkload(cfg, policy=policies["pow2"], max_len=LM_MAX_LEN)
+
+    drain = _lm_drain_race(wl, _lm_streams(cfg))
+
+    table = _lm_calibrate(wl, policies)
+    for (bucket, batch), sec in sorted(table.items()):
+        emit(f"serving_lm_calib_n{bucket}_b{batch}", sec * 1e6,
+             f"ms_per_batch={sec * 1e3:.2f}")
+    svc_time = _svc_time_fn(table)
+
+    poisson = {}
+    for pname, policy in policies.items():
+        trace = _trace(svc_time, policy, n_streams, n_requests, util,
+                       seed=43, n_min=LM_MIN_TOK, n_max=LM_MAX_TOK)
+        # one plugin instance per policy (the service reads its policy
+        # from the workload); params shared so nothing re-initializes
+        des_wl = LMDecodeWorkload(cfg, params=wl.params, policy=policy,
+                                  max_len=LM_MAX_LEN)
+        res = {"async": _des_async(policy, svc_time, trace, n_streams,
+                                   workload=des_wl),
+               "sync": _des_sync(policy, svc_time, trace, n_streams)}
+        poisson[pname] = res
+        for mode, m in res.items():
+            emit(f"serving_lm_poisson_{pname}_{mode}", m["p50_ms"] * 1e3,
+                 f"p50_ms={m['p50_ms']:.2f};p99_ms={m['p99_ms']:.2f};"
+                 f"windows_per_s={m['windows_per_s']:.1f};"
+                 f"shed_rate={m['shed_rate']:.4f};"
+                 f"padded_slot_frac={m['padded_slot_frac']:.3f}")
+
+    return {
+        "arch": LM_ARCH,
+        "drain": drain,
+        "calibration_ms": {f"n{b},b{k}": sec * 1e3
+                           for (b, k), sec in sorted(table.items())},
+        "poisson": poisson,
+    }
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 
@@ -379,49 +566,58 @@ def _metrics(responses, n_streams: int, span_end: float,
 def run() -> dict:
     import jax
 
-    cfg = CmaxConfig()
-    policies = {
-        "pow2": ev_data.pow2_policy(min_bucket=1024),
-        "single": ev_data.single_policy(MAX_EVENTS),
-    }
+    wanted = {w.strip() for w in os.environ.get(
+        "SERVING_BENCH_WORKLOADS", "cmax,lm").split(",") if w.strip()}
     n_streams = int(os.environ.get("SERVING_BENCH_STREAMS", "1000"))
     n_requests = int(os.environ.get(
         "SERVING_BENCH_REQUESTS", str(min(6 * n_streams, 20000))))
     util = float(os.environ.get("SERVING_BENCH_UTIL", "0.85"))
-
-    drain = _drain_race(cfg, _workload(cfg.camera), policies["pow2"])
-
-    table = _calibrate(cfg, policies)
-    for (bucket, batch), sec in sorted(table.items()):
-        emit(f"serving_calib_n{bucket}_b{batch}", sec * 1e6,
-             f"ms_per_batch={sec * 1e3:.2f}")
-    svc_time = _svc_time_fn(table)
-
-    poisson = {}
-    for pname, policy in policies.items():
-        trace = _trace(svc_time, policy, n_streams, n_requests, util,
-                       seed=42)
-        res = {"async": _des_async(policy, svc_time, trace, n_streams),
-               "sync": _des_sync(policy, svc_time, trace, n_streams)}
-        poisson[pname] = res
-        for mode, m in res.items():
-            emit(f"serving_poisson_{pname}_{mode}", m["p50_ms"] * 1e3,
-                 f"p50_ms={m['p50_ms']:.2f};p99_ms={m['p99_ms']:.2f};"
-                 f"windows_per_s={m['windows_per_s']:.1f};"
-                 f"shed_rate={m['shed_rate']:.4f};"
-                 f"padded_slot_frac={m['padded_slot_frac']:.3f}")
 
     results = {
         "meta": {"jax": jax.__version__,
                  "backend": jax.default_backend(),
                  "streams": n_streams, "requests": n_requests,
                  "util": util, "max_batch": MAX_BATCH,
-                 "deadline_batches": DEADLINE_BATCHES},
-        "drain": drain,
-        "calibration_ms": {f"n{b},b{k}": sec * 1e3
-                           for (b, k), sec in sorted(table.items())},
-        "poisson": poisson,
+                 "deadline_batches": DEADLINE_BATCHES,
+                 "workloads": sorted(wanted)},
     }
+
+    if "cmax" in wanted:
+        cfg = CmaxConfig()
+        policies = {
+            "pow2": ev_data.pow2_policy(min_bucket=1024),
+            "single": ev_data.single_policy(MAX_EVENTS),
+        }
+        drain = _drain_race(cfg, _workload(cfg.camera), policies["pow2"])
+
+        table = _calibrate(cfg, policies)
+        for (bucket, batch), sec in sorted(table.items()):
+            emit(f"serving_calib_n{bucket}_b{batch}", sec * 1e6,
+                 f"ms_per_batch={sec * 1e3:.2f}")
+        svc_time = _svc_time_fn(table)
+
+        poisson = {}
+        for pname, policy in policies.items():
+            trace = _trace(svc_time, policy, n_streams, n_requests, util,
+                           seed=42)
+            res = {"async": _des_async(policy, svc_time, trace, n_streams),
+                   "sync": _des_sync(policy, svc_time, trace, n_streams)}
+            poisson[pname] = res
+            for mode, m in res.items():
+                emit(f"serving_poisson_{pname}_{mode}", m["p50_ms"] * 1e3,
+                     f"p50_ms={m['p50_ms']:.2f};p99_ms={m['p99_ms']:.2f};"
+                     f"windows_per_s={m['windows_per_s']:.1f};"
+                     f"shed_rate={m['shed_rate']:.4f};"
+                     f"padded_slot_frac={m['padded_slot_frac']:.3f}")
+
+        # cmax stays at the top level so older baselines remain diffable
+        results["drain"] = drain
+        results["calibration_ms"] = {f"n{b},b{k}": sec * 1e3
+                                     for (b, k), sec in sorted(table.items())}
+        results["poisson"] = poisson
+
+    if "lm" in wanted:
+        results["lm"] = _lm_section(n_streams, n_requests, util)
     out_path = os.environ.get(
         "BENCH_SERVING_OUT", os.path.join(_repo_root(), "BENCH_serving.json"))
     with open(out_path, "w") as f:

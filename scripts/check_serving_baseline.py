@@ -4,8 +4,15 @@
     python scripts/check_serving_baseline.py BENCH_serving.json \
         artifacts/BENCH_serving.json
 
-Fails (exit 1) if batched-vs-sequential equivalence broke or the async
-drain throughput regressed more than 20% below the recorded baseline.
+Gates BOTH workload arms of the serving benchmark:
+
+  cmax (top-level "drain"): batched-vs-sequential equivalence within
+      1e-4 (float omega chains) and async drain throughput within 20%
+      of the recorded baseline.
+  lm  ("lm.drain"): EXACT token equality against the sequential
+      unbatched decode chain (int argmax predictions admit no
+      tolerance) and the same 20% async-throughput floor.
+
 The benchmark itself also asserts equivalence at run time; this check
 re-reads it from the artifact so a stale/corrupt artifact fails loudly.
 """
@@ -16,26 +23,51 @@ EQUIV_TOL = 1e-4
 REGRESSION_FLOOR = 0.8     # new throughput must be >= 80% of baseline
 
 
+def _floor_check(arm: str, key: str, new: dict, base: dict,
+                 unit: str) -> None:
+    floor = REGRESSION_FLOOR * base[key]
+    if new[key] < floor:
+        sys.exit(f"serving gate [{arm}]: throughput regression — async "
+                 f"drain {new[key]:.2f} {unit} < "
+                 f"{100 * REGRESSION_FLOOR:.0f}% of baseline "
+                 f"{base[key]:.2f}")
+
+
 def main(baseline_path: str, artifact_path: str) -> None:
     with open(baseline_path) as f:
-        base = json.load(f)["drain"]
+        base = json.load(f)
     with open(artifact_path) as f:
-        new = json.load(f)["drain"]
+        new = json.load(f)
 
-    if new["max_abs_dev"] >= EQUIV_TOL:
-        sys.exit("serving gate: batched-vs-sequential equivalence broken "
-                 f"(max_abs_dev={new['max_abs_dev']:.2e} >= {EQUIV_TOL})")
-    floor = REGRESSION_FLOOR * base["async_windows_per_s"]
-    if new["async_windows_per_s"] < floor:
-        sys.exit("serving gate: throughput regression — async drain "
-                 f"{new['async_windows_per_s']:.2f} windows/s < "
-                 f"{100 * REGRESSION_FLOOR:.0f}% of baseline "
-                 f"{base['async_windows_per_s']:.2f}")
+    for arm in ("drain", "lm"):
+        if arm not in new:
+            sys.exit(f"serving gate: artifact is missing the "
+                     f"{'cmax' if arm == 'drain' else 'lm'} arm "
+                     f"({arm!r} key) — was SERVING_BENCH_WORKLOADS "
+                     f"restricted?")
+
+    nd, bd = new["drain"], base["drain"]
+    if nd["max_abs_dev"] >= EQUIV_TOL:
+        sys.exit("serving gate [cmax]: batched-vs-sequential equivalence "
+                 f"broken (max_abs_dev={nd['max_abs_dev']:.2e} >= "
+                 f"{EQUIV_TOL})")
+    _floor_check("cmax", "async_windows_per_s", nd, bd, "windows/s")
+
+    nl, bl = new["lm"]["drain"], base["lm"]["drain"]
+    if not nl.get("exact", False) or nl.get("mismatched_chunks", 1) != 0:
+        sys.exit("serving gate [lm]: served tokens deviate from the "
+                 "sequential unbatched decode chain "
+                 f"(mismatched_chunks={nl.get('mismatched_chunks')})")
+    _floor_check("lm", "async_tok_per_s", nl, bl, "tok/s")
+
     print("serving gate ok: "
-          f"async {new['async_windows_per_s']:.2f} windows/s "
-          f"(baseline {base['async_windows_per_s']:.2f}), "
-          f"speedup over sync {new['speedup']:.3f}x, "
-          f"max_abs_dev {new['max_abs_dev']:.2e}")
+          f"cmax async {nd['async_windows_per_s']:.2f} windows/s "
+          f"(baseline {bd['async_windows_per_s']:.2f}, "
+          f"speedup {nd['speedup']:.3f}x, "
+          f"max_abs_dev {nd['max_abs_dev']:.2e}); "
+          f"lm async {nl['async_tok_per_s']:.1f} tok/s "
+          f"(baseline {bl['async_tok_per_s']:.1f}, "
+          f"speedup {nl['speedup']:.3f}x, exact)")
 
 
 if __name__ == "__main__":

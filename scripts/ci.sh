@@ -13,6 +13,14 @@ python -m pip install -e ".[dev]" \
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q --durations=10
 
+# Cross-workload serving conformance + LM property suites, in full: the
+# default addopts exclude tests marked `slow` (the LM decode differential
+# pin and the padding sweep), so run these two files with the marker
+# filter cleared — a new Workload plugin is servable exactly when this
+# passes.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q -o addopts= \
+    tests/test_workload_conformance.py tests/test_lm_properties.py
+
 # Serving load generator, smoke mode: real drain race (async vs sync, with
 # the batched-vs-sequential equivalence assertion inside) + virtual-time
 # Poisson sweep. Writes the artifact next to the checked-in baseline so

@@ -1,14 +1,23 @@
-"""Serving launchers: the async continuous-batching CMAX estimation
-service (+ the synchronous baseline and the LM demo).
+"""Serving launchers: the async continuous-batching estimation service
+(+ the synchronous baseline), workload-agnostic over `Workload` plugins.
 
 The primary entry point is `AsyncBatchedEstimationService` (DESIGN.md
 §Serving): an admission -> bucket -> in-flight -> refill -> completion
-loop over variable-length event windows. Requests are admitted while
-batches are in flight (JAX async dispatch, donated warm-start buffers),
-a finished batch's capacity is refilled immediately without waiting for
-the queue to drain, and per-request deadline/priority classes shed late
-windows instead of letting them stall the queue — the serving-time
-analogue of the paper's low-value-iteration suppression.
+loop over variable-length request payloads. Requests are admitted while
+batches are in flight (JAX async dispatch, donated carried-state
+buffers), a finished batch's capacity is refilled immediately without
+waiting for the queue to drain, and per-request deadline/priority
+classes shed late windows instead of letting them stall the queue — the
+serving-time analogue of the paper's low-value-iteration suppression.
+
+Everything workload-specific lives behind the `repro.serving.Workload`
+plugin interface: bucketing, batch materialization, the executable
+factory, per-stream carried state, QoS budget allocation, and harvest.
+The default plugin is `CmaxWorkload` (variable-length event windows,
+warm-start omega carried per stream) — constructing a service from a
+`CmaxConfig` is unchanged; `LMDecodeWorkload` serves LM decode in
+variable-length token chunks with the per-stream KV/recurrent cache
+carried across windows through the very same scheduler.
 
 Requests may additionally carry a QoS class (`QosClass`) with a
 per-window energy and/or modelled-latency budget: the service turns the
@@ -24,9 +33,9 @@ point — accuracy-per-joule as a serving knob (DESIGN.md §5):
     PYTHONPATH=src python -m repro.launch.serve cmax \
         --streams 4 --windows 4 --policy pow2
 
-    # the original LM prefill + batched decode demo
+    # LM decode served through the same bucketed async service
     PYTHONPATH=src python -m repro.launch.serve lm --arch llama3.2-1b \
-        --batch 4 --prompt-len 16 --gen 24
+        --streams 4 --chunks 3 --max-tokens 48
 
 Library use (see examples/serve_batch.py for a runnable version):
 
@@ -277,12 +286,16 @@ class AsyncBatchedEstimationService:
     """Admission -> bucket -> in-flight -> refill -> completion loop.
 
     Parameters:
-      cfg: CmaxConfig (static; part of every executable-cache key).
+      cfg: CmaxConfig (static; part of every executable-cache key) — the
+        default-workload shorthand. A `repro.serving.Workload` instance
+        may be passed here (or via `workload=`) instead; `policy`, `mesh`
+        and `scheduler` then come from the plugin.
       policy: events.BucketPolicy mapping raw event counts to length
-        classes (default: power-of-two buckets from 512).
+        classes (default: power-of-two buckets from 512). CMAX shorthand;
+        ignored when a workload is given.
       max_batch: largest batch class; smaller batches pad to the next
         power of two.
-      mesh: optional jax mesh — batches then run through
+      mesh: optional jax mesh — CMAX batches then run through
         `core.distributed.estimate_batch_sharded` (batch classes kept
         divisible by the mesh's DP extent).
       clock: time source (default MonotonicClock). Deadlines are absolute
@@ -291,6 +304,8 @@ class AsyncBatchedEstimationService:
       max_in_flight: dispatch depth — how many batches may be in flight
         before admission pauses (2 = one computing + one queued keeps the
         device saturated without unbounded buffering).
+      workload: the `Workload` plugin to serve (default: `CmaxWorkload`
+        built from cfg/policy/mesh/scheduler).
 
     The drive loop is `poll()`: harvest every finished in-flight batch
     (any order), shed queued requests whose deadline has passed, then
@@ -299,14 +314,20 @@ class AsyncBatchedEstimationService:
     blocking on the oldest in-flight batch when otherwise idle.
     """
 
-    def __init__(self, cfg, policy=None, max_batch: int = 8, mesh=None,
+    def __init__(self, cfg=None, policy=None, max_batch: int = 8, mesh=None,
                  clock=None, executor=None, max_in_flight: int = 2,
-                 qos_classes=None, scheduler=None):
-        from repro.data import events as ev_data
-        self.cfg = cfg
-        self.policy = policy or ev_data.pow2_policy(min_bucket=512)
+                 qos_classes=None, scheduler=None, workload=None):
+        from repro.serving.workload import CmaxWorkload, Workload
+        if workload is None and isinstance(cfg, Workload):
+            cfg, workload = None, cfg
+        if workload is None:
+            workload = CmaxWorkload(cfg, policy=policy, mesh=mesh,
+                                    scheduler=scheduler)
+        self.workload = workload
+        self.cfg = getattr(workload, "cfg", cfg)
+        self.policy = workload.policy
         self.max_batch = int(max_batch)
-        self.mesh = mesh
+        self.mesh = getattr(workload, "mesh", None)
         self.clock = clock or MonotonicClock()
         self.executor = executor or AsyncDispatchExecutor()
         self.max_in_flight = int(max_in_flight)
@@ -316,15 +337,12 @@ class AsyncBatchedEstimationService:
             "standard": QosClass("standard")}
         for q in (qos_classes or ()):
             self.qos_classes[q.name] = q
-        self._scheduler = scheduler      # costmodel.BudgetScheduler (lazy)
-        if self.mesh is not None and any(q.budgeted
-                                         for q in self.qos_classes.values()):
-            raise ValueError("budgeted QoS classes are not supported with a "
-                             "mesh (estimate_batch_sharded has no budgeted "
-                             "variant yet)")
+        if any(q.budgeted for q in self.qos_classes.values()) \
+                and not workload.supports_budgets:
+            raise ValueError(workload.budget_unsupported_msg)
         self._queue: List[WindowRequest] = []   # arrival order
         self._seq: Dict[str, int] = {}
-        self._warm: Dict[str, np.ndarray] = {}
+        self._warm: Dict[str, object] = {}      # per-stream carried state
         self._gain: Dict[str, float] = {}       # measured Eq. 7 gain / stream
         self._busy: set = set()                 # streams with a window in flight
         self._inflight: Deque[_InFlight] = deque()
@@ -351,14 +369,13 @@ class AsyncBatchedEstimationService:
         """
         # bucketing at submit time rejects unservable sizes immediately —
         # a poison request must never sit in the queue
-        bucket_n = self.policy.bucket_of(window.n)
+        bucket_n = self.workload.bucket_of(window)
         if qos not in self.qos_classes:
             raise ValueError(f"unknown QoS class {qos!r} "
                              f"(have {sorted(self.qos_classes)})")
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
-        hint = None if omega_hint is None else np.asarray(omega_hint,
-                                                          np.float32)
+        hint = self.workload.coerce_hint(omega_hint)
         self._queue.append(WindowRequest(
             stream_id, seq, window, bucket_n, hint, int(priority),
             None if deadline is None else float(deadline),
@@ -377,78 +394,34 @@ class AsyncBatchedEstimationService:
 
     def _executable(self, bucket_n: int, batch_b: int,
                     budgeted: bool = False):
-        """The compiled batch function for one (length, batch) class.
+        """The compiled batch function for one (length, batch) class,
+        built by the workload's executable factory.
 
         Budgeted batches are a separate executable class (the iteration
         caps are an extra traced (B, S) operand) — but caps are data, so
         every allocation of that shape class shares one executable."""
-        from repro.core.pipeline import (estimate_batch_budgeted,
-                                         estimate_batch_donated)
-
         key = (bucket_n, batch_b, budgeted)
         fn = self._cache.get(key)
         if fn is None:
-            cfg = self.cfg
-            if self.mesh is not None:
-                from repro.core.distributed import estimate_batch_sharded
-                mesh = self.mesh
-                fn = lambda w, o: estimate_batch_sharded(w, o, cfg, mesh)
-            elif budgeted:
-                fn = lambda w, o, caps: estimate_batch_budgeted(
-                    w, o, caps, cfg)
-            else:
-                # module-level jitted with static cfg + donated warm-start
-                # buffer; executables are shared across service instances —
-                # the per-key entry only tracks which shape classes THIS
-                # service has needed.
-                fn = lambda w, o: estimate_batch_donated(w, o, cfg)
+            fn = self.workload.executable(bucket_n, batch_b,
+                                          budgeted=budgeted)
             self._cache[key] = fn
             self.stats["compiles"] += 1
         return fn
 
     # -- QoS: budget -> per-slot iteration caps -------------------------------
 
-    def _budget_scheduler(self):
-        if self._scheduler is None:
-            from repro.costmodel import BudgetScheduler, load_profile
-            self._scheduler = BudgetScheduler(load_profile("paper_fpga_45nm"))
-        return self._scheduler
-
     def _allocate_caps(self, batch: List[WindowRequest],
                        batch_b: int) -> Optional[np.ndarray]:
-        """Per-slot iteration caps for one formed batch, or None when every
-        member is standard. Same-class budgets are pooled across the
-        batch's members; standard slots (and fill slots) are uncapped, so
-        mixed batches share one budgeted executable class."""
-        classes = {r.qos: self.qos_classes[r.qos] for r in batch}
-        if not any(q.budgeted for q in classes.values()):
+        """Per-slot work caps for one formed batch, or None when every
+        member is standard. Whether anyone is budgeted is scheduler
+        policy (decided here); what a budget buys is workload policy
+        (the plugin pools same-class budgets and turns them into caps,
+        fed by each stream's measured gain)."""
+        if not any(self.qos_classes[r.qos].budgeted for r in batch):
             return None
-        sched = self._budget_scheduler()
-        S = len(self.cfg.stages)
-        uncapped = max(int(s.max_iters) for s in self.cfg.stages)
-        caps = np.full((batch_b, S), uncapped, np.int32)
-        for name, q in classes.items():
-            if not q.budgeted:
-                continue
-            members = [(i, r) for i, r in enumerate(batch) if r.qos == name]
-            plans = [sched.plan_window(self.cfg, r.window.n,
-                                       gain0=self._gain.get(r.stream_id))
-                     for _, r in members]
-            alloc = sched.allocate(
-                plans,
-                budget_uj=None if q.budget_uj is None
-                else q.budget_uj * len(members),
-                budget_ms=None if q.budget_ms is None
-                else q.budget_ms * len(members))
-            for j, (i, _) in enumerate(members):
-                caps[i] = alloc.iters[j]
-            self.stats["budgeted_windows"] += len(members)
-            if np.isfinite(alloc.spent_uj):
-                self.stats["budget_spent_uj"] += alloc.spent_uj
-        # fill slots replicate the leader's data and are discarded — cap
-        # them at the 1-iteration floor so they buy no wasted refinement
-        caps[len(batch):, :] = 1
-        return caps
+        return self.workload.allocate_caps(batch, batch_b, self.qos_classes,
+                                           self._gain, self.stats)
 
     # -- scheduling: shed / admit / launch ------------------------------------
 
@@ -461,9 +434,9 @@ class AsyncBatchedEstimationService:
         for r in self._queue:
             if r.deadline is not None and now > r.deadline:
                 self.stats["shed"] += 1
-                om = self._warm.get(r.stream_id, np.zeros(3, np.float32))
+                out = self.workload.shed_output(self._warm.get(r.stream_id))
                 self._ready.append(WindowResponse(
-                    r.stream_id, r.seq, om, (), r.bucket_n, 0,
+                    r.stream_id, r.seq, out, (), r.bucket_n, 0,
                     status="shed", t_submit=r.t_submit, t_done=now,
                     qos=r.qos))
             else:
@@ -485,9 +458,6 @@ class AsyncBatchedEstimationService:
         """Form and dispatch one batch: the highest-priority (then oldest)
         admissible request leads and fixes the length class; admissible
         same-class requests join in priority order up to max_batch."""
-        import jax.numpy as jnp
-        from repro.data import events as ev_data
-
         cands = self._admissible()
         if not cands:
             return False
@@ -505,30 +475,28 @@ class AsyncBatchedEstimationService:
         n_fill = batch_b - len(batch)
         caps = self._allocate_caps(batch, batch_b)
         if getattr(self.executor, "needs_data", True):
-            omega0 = [r.omega_hint if r.omega_hint is not None
+            states = [r.omega_hint if r.omega_hint is not None
                       else self._warm.get(r.stream_id,
-                                          np.zeros(3, np.float32))
+                                          self.workload.default_state())
                       for r in batch]
-            omega0 += [omega0[0]] * n_fill
-            ev_batch, n_fill = ev_data.fill_batch(
-                [r.window for r in batch], bucket_n, batch_b)
-            om_batch = jnp.asarray(np.stack(omega0))
+            ev_batch, om_batch, n_fill = self.workload.make_batch(
+                [r.window for r in batch], states, bucket_n, batch_b)
         else:
             ev_batch = om_batch = None    # virtual-time simulation
 
         fn = self._executable(bucket_n, batch_b, budgeted=caps is not None)
         if caps is not None:
-            # the caps are per-dispatch data; close them over so every
-            # executor sees the uniform fn(ev, omega) submit signature
-            caps_arr = jnp.asarray(caps)
-            fn = (lambda _fn, _c: lambda w, o: _fn(w, o, _c))(fn, caps_arr)
+            # the caps are per-dispatch data; the workload closes them over
+            # so every executor sees the uniform fn(data, state) signature
+            fn = self.workload.attach_caps(fn, caps)
         handle = self.executor.submit(fn, ev_batch, om_batch,
                                       bucket_n, batch_b)
         self._inflight.append(_InFlight(batch, handle, bucket_n, batch_b,
                                         self.clock.now()))
         self.stats["batches"] += 1
         self.stats["event_slots"] += bucket_n * batch_b
-        self.stats["raw_events"] += sum(r.window.n for r in batch)
+        self.stats["raw_events"] += sum(self.workload.size_of(r.window)
+                                        for r in batch)
         self.stats["fill_slots"] += n_fill
         return True
 
@@ -537,27 +505,19 @@ class AsyncBatchedEstimationService:
     def _finish(self, fb: _InFlight) -> None:
         res = self.executor.wait(fb.handle)
         now = self.clock.now()
-        omegas = np.asarray(res.omega)
-        stages = getattr(res, "stages", ())
-        iters = [np.asarray(tr.iters) for tr in stages]
         track_gain = any(q.budgeted for q in self.qos_classes.values())
-        if track_gain and stages:
-            v_ent = [np.asarray(tr.v_entry) for tr in stages]
-            v_fin = [np.asarray(tr.v_final) for tr in stages]
+        slot = self.workload.harvest(res, track_gain)
         for i, r in enumerate(fb.requests):
-            om = omegas[i]
-            self._warm[r.stream_id] = om
+            out, state, iters, gain = slot(i)
+            if state is not None:    # None = data-free run; keep old state
+                self._warm[r.stream_id] = state
             self._busy.discard(r.stream_id)
-            if track_gain and stages:
-                # measured Eq. 7 gain per accepted iteration, averaged over
-                # stages — feeds the scheduler's gain model for this
-                # stream's NEXT window (closing measurement -> allocation)
-                g = [(vf[i] - ve[i]) / ((abs(ve[i]) + 1e-12)
-                                        * max(int(it[i]), 1))
-                     for ve, vf, it in zip(v_ent, v_fin, iters)]
-                self._gain[r.stream_id] = max(float(np.mean(g)), 0.0)
+            if gain is not None:
+                # measured gain feeds the budget scheduler's model for
+                # this stream's NEXT window (measurement -> allocation)
+                self._gain[r.stream_id] = gain
             self._ready.append(WindowResponse(
-                r.stream_id, r.seq, om, tuple(int(it[i]) for it in iters),
+                r.stream_id, r.seq, out, iters,
                 fb.bucket_n, fb.batch_b, status="ok",
                 t_submit=r.t_submit, t_done=now, qos=r.qos))
         self.stats["windows"] += len(fb.requests)
@@ -628,25 +588,35 @@ class BatchedEstimationService:
     for the continuous-batching loop with deadlines/priorities.
 
     Parameters:
-      cfg: CmaxConfig (static; part of every executable-cache key).
+      cfg: CmaxConfig (static; part of every executable-cache key) — the
+        default-workload shorthand; a `repro.serving.Workload` instance
+        may be passed here (or via `workload=`) instead.
       policy: events.BucketPolicy mapping raw event counts to length
-        classes (default: power-of-two buckets from 512).
+        classes (default: power-of-two buckets from 512). CMAX shorthand;
+        ignored when a workload is given.
       max_batch: largest batch class; smaller batches pad to the next
         power of two.
-      mesh: optional jax mesh — when given, batches run through
+      mesh: optional jax mesh — CMAX batches then run through
         `core.distributed.estimate_batch_sharded` (batch classes are then
         kept divisible by the mesh's DP extent).
+      workload: the `Workload` plugin to serve (default: `CmaxWorkload`).
     """
 
-    def __init__(self, cfg, policy=None, max_batch: int = 8, mesh=None):
-        from repro.data import events as ev_data
-        self.cfg = cfg
-        self.policy = policy or ev_data.pow2_policy(min_bucket=512)
+    def __init__(self, cfg=None, policy=None, max_batch: int = 8, mesh=None,
+                 workload=None):
+        from repro.serving.workload import CmaxWorkload, Workload
+        if workload is None and isinstance(cfg, Workload):
+            cfg, workload = None, cfg
+        if workload is None:
+            workload = CmaxWorkload(cfg, policy=policy, mesh=mesh)
+        self.workload = workload
+        self.cfg = getattr(workload, "cfg", cfg)
+        self.policy = workload.policy
         self.max_batch = int(max_batch)
-        self.mesh = mesh
+        self.mesh = getattr(workload, "mesh", None)
         self._queue: Deque[WindowRequest] = deque()
         self._seq: Dict[str, int] = {}
-        self._warm: Dict[str, np.ndarray] = {}
+        self._warm: Dict[str, object] = {}      # per-stream carried state
         self._cache: Dict[Tuple[int, int], object] = {}
         self.stats = {"windows": 0, "batches": 0, "compiles": 0,
                       "event_slots": 0, "raw_events": 0, "fill_slots": 0}
@@ -661,11 +631,10 @@ class BatchedEstimationService:
         """
         # bucketing at submit time rejects unservable sizes immediately —
         # a poison request must never sit in the queue
-        bucket_n = self.policy.bucket_of(window.n)
+        bucket_n = self.workload.bucket_of(window)
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
-        hint = None if omega_hint is None else np.asarray(omega_hint,
-                                                          np.float32)
+        hint = self.workload.coerce_hint(omega_hint)
         self._queue.append(
             WindowRequest(stream_id, seq, window, bucket_n, hint))
         return seq
@@ -676,23 +645,16 @@ class BatchedEstimationService:
     # -- executable cache --------------------------------------------------
 
     def _executable(self, bucket_n: int, batch_b: int):
-        """The compiled batch function for one (length, batch) class."""
-        from repro.core.pipeline import estimate_batch
+        """The compiled batch function for one (length, batch) class.
 
+        `donate=False`: the sync drain re-reads nothing, but it is the
+        measured baseline — it keeps the original non-donating entry
+        point so async-vs-sync comparisons isolate scheduling, not
+        buffer reuse."""
         key = (bucket_n, batch_b)
         fn = self._cache.get(key)
         if fn is None:
-            cfg = self.cfg
-            if self.mesh is not None:
-                from repro.core.distributed import estimate_batch_sharded
-                mesh = self.mesh
-                fn = lambda w, o: estimate_batch_sharded(w, o, cfg, mesh)
-            else:
-                # estimate_batch is module-level jitted with static cfg,
-                # so executables are shared across service instances; the
-                # per-key entry (and the compile counter) only tracks
-                # which shape classes THIS service has needed.
-                fn = lambda w, o: estimate_batch(w, o, cfg)
+            fn = self.workload.executable(bucket_n, batch_b, donate=False)
             self._cache[key] = fn
             self.stats["compiles"] += 1
         return fn
@@ -733,8 +695,6 @@ class BatchedEstimationService:
         """Drain ONE batch from the queue and return its responses
         (empty list if the queue is empty)."""
         import jax
-        import jax.numpy as jnp
-        from repro.data import events as ev_data
 
         batch = self._collect()
         if not batch:
@@ -742,32 +702,31 @@ class BatchedEstimationService:
         bucket_n = batch[0].bucket_n
         batch_b = self._batch_class(len(batch))
 
-        omega0 = [req.omega_hint if req.omega_hint is not None
-                  else self._warm.get(req.stream_id, np.zeros(3, np.float32))
+        states = [req.omega_hint if req.omega_hint is not None
+                  else self._warm.get(req.stream_id,
+                                      self.workload.default_state())
                   for req in batch]
         # fill slots replicate the leader (finite data, results discarded)
-        ev_batch, n_fill = ev_data.fill_batch(
-            [req.window for req in batch], bucket_n, batch_b)
-        omega0 += [omega0[0]] * n_fill
-        om_batch = jnp.asarray(np.stack(omega0))
+        data, state_batch, n_fill = self.workload.make_batch(
+            [req.window for req in batch], states, bucket_n, batch_b)
         fn = self._executable(bucket_n, batch_b)
-        res = jax.block_until_ready(fn(ev_batch, om_batch))
+        res = jax.block_until_ready(fn(data, state_batch))
 
-        omegas = np.asarray(res.omega)
-        iters = [np.asarray(tr.iters) for tr in res.stages]
+        slot = self.workload.harvest(res, False)
         out = []
         for i, req in enumerate(batch):
-            om = omegas[i]
-            self._warm[req.stream_id] = om
+            out_i, state, iters, _ = slot(i)
+            if state is not None:
+                self._warm[req.stream_id] = state
             out.append(WindowResponse(
-                stream_id=req.stream_id, seq=req.seq, omega=om,
-                iters=tuple(int(it[i]) for it in iters),
-                bucket_n=bucket_n, batch_b=batch_b))
+                stream_id=req.stream_id, seq=req.seq, omega=out_i,
+                iters=iters, bucket_n=bucket_n, batch_b=batch_b))
 
         self.stats["windows"] += len(batch)
         self.stats["batches"] += 1
         self.stats["event_slots"] += bucket_n * batch_b
-        self.stats["raw_events"] += sum(req.window.n for req in batch)
+        self.stats["raw_events"] += sum(self.workload.size_of(req.window)
+                                        for req in batch)
         self.stats["fill_slots"] += n_fill
         return out
 
@@ -867,50 +826,46 @@ def _run_cmax(args) -> None:
 
 
 def _run_lm(args) -> None:
-    import jax
-    import jax.numpy as jnp
     from repro.configs import get_smoke_config
-    from repro.models import make_serve_step
-    from repro.models import transformer as tfm
+    from repro.data import lm as lm_data
+    from repro.serving import LMDecodeWorkload
 
     cfg = get_smoke_config(args.arch)
-    key = jax.random.key(0)
-    max_len = args.prompt_len + args.gen
-    params = tfm.init_params(key, cfg, max_len=max_len)
-    B = args.batch
+    policy = lm_data.chunk_policy(min_bucket=args.min_bucket)
+    wl = LMDecodeWorkload(cfg, policy=policy, max_len=args.max_len)
+    if args.sync:
+        svc = BatchedEstimationService(workload=wl,
+                                       max_batch=args.max_batch)
+    else:
+        svc = AsyncBatchedEstimationService(workload=wl,
+                                            max_batch=args.max_batch)
 
-    cross = None
-    if cfg.family == "vlm":
-        cross = jax.random.normal(key, (B, cfg.cross_source_len,
-                                        cfg.d_model)) * 0.1
-    if cfg.is_enc_dec:
-        frames = jax.random.normal(key, (B, cfg.cross_source_len,
-                                         cfg.d_model)) * 0.1
-        cross = tfm.encode(params, cfg, frames)
+    data_cfg = lm_data.LMDataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.max_tokens,
+                                    global_batch=1, seed=0)
+    streams = lm_data.token_streams(data_cfg, args.streams, args.chunks,
+                                    args.min_tokens, args.max_tokens)
+    n_tok = 0
+    for sid, chunks in streams.items():
+        for c in chunks:
+            svc.submit(sid, c)
+            n_tok += c.n
 
-    # prefill through the decode path (populates the cache)
-    cache = tfm.init_cache(cfg, B, max_len=max_len)
-    prompt = jax.random.randint(key, (B, args.prompt_len), 0,
-                                cfg.vocab_size)
-    serve = jax.jit(make_serve_step(cfg))
-    tok = prompt[:, :1]
+    n_req = svc.pending()
     t0 = time.perf_counter()
-    for t in range(args.prompt_len - 1):
-        _, _, cache = serve(params, cache, prompt[:, t:t + 1], cross)
-    # greedy generation
-    tok = prompt[:, -1:]
-    out = []
-    for _ in range(args.gen):
-        tok, logits, cache = serve(params, cache, tok, cross)
-        out.append(tok)
-    toks = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(toks)
+    responses = svc.drain()
     dt = time.perf_counter() - t0
-    total = args.prompt_len - 1 + args.gen
-    print(f"{cfg.name}: served {B} requests, {total} steps in "
-          f"{dt:.2f}s ({1e3 * dt / total:.1f} ms/step incl first-call "
-          f"compile)")
-    print("generated token ids (req 0):", toks[0].tolist())
+    mode = "sync FIFO drain" if args.sync else "async continuous batching"
+    print(f"{cfg.name}: served {len(responses)}/{n_req} chunks "
+          f"({n_tok} tokens) from {args.streams} streams in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl compile, {mode})")
+    print(f"batches={svc.stats['batches']} compiles={svc.stats['compiles']} "
+          f"padded_slot_frac={svc.padded_slot_frac:.3f} "
+          f"policy={svc.policy.name}")
+    first = min(responses, key=lambda r: (r.stream_id, r.seq))
+    preds = np.asarray(first.omega)
+    print(f"greedy continuation ids ({first.stream_id} chunk 0, "
+          f"first {min(16, preds.size)}):", preds[:16].tolist())
 
 
 def main(argv=None):
@@ -945,11 +900,23 @@ def main(argv=None):
     cm.add_argument("--budget-ms", type=float, default=None,
                     help="per-window modelled-latency budget (ms)")
 
-    lm = sub.add_parser("lm", help="LM prefill + batched decode demo")
+    lm = sub.add_parser("lm", help="LM decode served in variable-length "
+                                   "token chunks through the bucketed "
+                                   "async service")
     lm.add_argument("--arch", required=True)
-    lm.add_argument("--batch", type=int, default=4)
-    lm.add_argument("--prompt-len", type=int, default=16)
-    lm.add_argument("--gen", type=int, default=24)
+    lm.add_argument("--streams", type=int, default=4)
+    lm.add_argument("--chunks", type=int, default=3,
+                    help="chunks per stream (per-stream KV cache is "
+                         "carried across them)")
+    lm.add_argument("--min-tokens", type=int, default=8)
+    lm.add_argument("--max-tokens", type=int, default=48)
+    lm.add_argument("--min-bucket", type=int, default=16)
+    lm.add_argument("--max-len", type=int, default=256,
+                    help="per-stream KV cache capacity (total tokens a "
+                         "stream may decode)")
+    lm.add_argument("--max-batch", type=int, default=4)
+    lm.add_argument("--sync", action="store_true",
+                    help="use the synchronous FIFO-drain baseline")
 
     args = ap.parse_args(argv)
     if args.mode == "cmax":

@@ -1,0 +1,15 @@
+"""Workload-plugin serving substrate (DESIGN.md §Workload plugins).
+
+The batched services in `repro.launch.serve` are workload-agnostic
+schedulers; everything workload-specific — bucketing, batch
+materialization, the executable factory, per-stream carried state, QoS
+budget allocation, harvest — lives behind the `Workload` interface
+defined here. Two plugins ship: `CmaxWorkload` (the paper's contrast-
+maximization pipeline; bitwise drop-in for the pre-plugin service) and
+`LMDecodeWorkload` (LM decode in variable-length token chunks with the
+per-stream KV/recurrent cache carried across windows).
+"""
+from .workload import (CmaxWorkload, LMDecodeWorkload, LMChunkResult,
+                       Workload)
+
+__all__ = ["Workload", "CmaxWorkload", "LMDecodeWorkload", "LMChunkResult"]
