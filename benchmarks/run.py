@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -17,7 +18,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "accuracy", "convergence", "locality",
                              "energy", "kernels", "serving"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="serving suite: write the JSONL telemetry trace "
+                         "(request spans + adaptation decisions) here")
     args = ap.parse_args()
+    if args.trace_out:
+        os.environ["BENCH_SERVING_TRACE_OUT"] = args.trace_out
 
     from . import (accuracy, convergence, energy_latency, kernels, locality,
                    serving)

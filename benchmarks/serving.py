@@ -56,6 +56,7 @@ from repro.data import lm as lm_data
 from repro.launch.serve import (AsyncBatchedEstimationService,
                                 BatchedEstimationService, FakeClock)
 from repro.serving import LMDecodeWorkload
+from repro.telemetry import Telemetry
 
 N_STREAMS = 8            # drain race: real streams
 N_WINDOWS = 4            # drain race: windows per stream
@@ -73,6 +74,12 @@ LM_MAX_LEN = 64          # carried-cache capacity >= LM_CHUNKS * LM_MAX_TOK
 
 def _repo_root() -> str:
     return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+#: serialized spans + decision records accumulated across the benchmark,
+#: written as one JSONL file when BENCH_SERVING_TRACE_OUT (or run.py's
+#: --trace-out) names a path
+_TRACE_SINK: List[dict] = []
 
 
 # ---------------------------------------------------------------------------
@@ -147,12 +154,17 @@ def _drain_race(cfg, workload, policy) -> dict:
     except AttributeError:
         cores = os.cpu_count() or 1
     depth = 2 if cores > 1 else 1
+    # decision logging ON during the timed race: its cost is part of what
+    # the telemetry-overhead CI gate bounds, and the log must reproduce
+    # every response's per-stage iteration counts exactly
+    tel = Telemetry(decisions=True)
     services = {
         "sync": BatchedEstimationService(cfg, policy=policy,
                                          max_batch=MAX_BATCH),
         "async": AsyncBatchedEstimationService(cfg, policy=policy,
                                                max_batch=MAX_BATCH,
-                                               max_in_flight=depth),
+                                               max_in_flight=depth,
+                                               telemetry=tel),
     }
     for svc in services.values():   # cold pass compiles every shape class
         _submit_all(svc, workload)
@@ -180,14 +192,31 @@ def _drain_race(cfg, workload, policy) -> dict:
                 r.omega - ref[(r.stream_id, r.seq % N_WINDOWS)]).max())
             worst = max(worst, dev)
 
+    # the decision log must reproduce every async response's per-stage
+    # iteration counts EXACTLY (the telemetry acceptance criterion)
+    logged = tel.decisions.iters_by_request()
+    iters_mismatch = sum(
+        1 for r in resp_async
+        if logged.get((r.stream_id, r.seq)) != tuple(r.iters))
+    verdicts = tel.decisions.verdict_counts()
+
     out = dict(sync_windows_per_s=wps_sync, async_windows_per_s=wps_async,
                speedup=wps_async / wps_sync, max_abs_dev=worst,
-               max_in_flight=depth)
+               max_in_flight=depth,
+               decision_records=len(tel.decisions.records),
+               iters_match=iters_mismatch == 0, verdicts=verdicts)
     emit("serving_drain_race", 0.0,
          f"sync_wps={wps_sync:.2f};async_wps={wps_async:.2f};"
          f"speedup={out['speedup']:.3f}")
     emit("serving_equivalence", 0.0, f"max_abs_dev={worst:.2e}")
+    emit("serving_decision_log", 0.0,
+         f"records={out['decision_records']};"
+         f"iters_mismatch={iters_mismatch}")
     assert worst < 1e-4, f"batched deviates from sequential ref by {worst}"
+    assert iters_mismatch == 0, \
+        f"decision log disagrees with {iters_mismatch} responses' iters"
+    if os.environ.get("BENCH_SERVING_TRACE_OUT"):
+        _TRACE_SINK.extend(tel.decisions.records)
     return out
 
 
@@ -313,17 +342,21 @@ def _des_async(policy, svc_time, trace, n_streams: int,
     clock = FakeClock()
     ex = SimExecutor(clock, svc_time,
                      null_result=workload.null_result if workload else None)
+    # span tracing ON: the DES runs in virtual time, so the span phase
+    # decomposition (queue_wait + assemble + execute) must telescope onto
+    # each response's latency EXACTLY — asserted in _span_telemetry
+    tel = Telemetry(spans=True)
     # dispatch depth 2 (the production default): deeper windows would
     # just move queue wait into un-sheddable device backlog — a request
     # already dispatched is never shed, so SLO control needs the queue
     if workload is not None:
         svc = AsyncBatchedEstimationService(
             workload=workload, max_batch=MAX_BATCH, clock=clock,
-            executor=ex, max_in_flight=2)
+            executor=ex, max_in_flight=2, telemetry=tel)
     else:
         svc = AsyncBatchedEstimationService(
             CmaxConfig(), policy=policy, max_batch=MAX_BATCH, clock=clock,
-            executor=ex, max_in_flight=2)
+            executor=ex, max_in_flight=2, telemetry=tel)
     responses: List = []
     i = 0
     while i < n or svc.in_flight() or svc.pending():
@@ -338,8 +371,57 @@ def _des_async(policy, svc_time, trace, n_streams: int,
         elif t_next_done < math.inf:
             clock.advance_to(t_next_done)
         responses.extend(svc.poll())
-    return _metrics(responses, n_streams, span_end=clock.now(),
-                    padded_slot_frac=svc.padded_slot_frac)
+    out = _metrics(responses, n_streams, span_end=clock.now(),
+                   padded_slot_frac=svc.padded_slot_frac)
+    out["telemetry"] = _span_telemetry(tel, svc, responses)
+    return out
+
+
+def _span_telemetry(tel: Telemetry, svc, responses) -> dict:
+    """The BENCH_serving telemetry section for one instrumented run:
+    queue-wait vs execute decomposition, compile-cache hit rate, and the
+    shed breakdown — plus the exactness checks the spans must pass."""
+    spans = [s.to_dict() for s in tel.tracer.spans]
+    if os.environ.get("BENCH_SERVING_TRACE_OUT"):
+        _TRACE_SINK.extend(spans)
+    by_key = {(s["stream_id"], s["seq"]): s for s in spans}
+    assert len(by_key) == len(spans) == len(responses)
+
+    # every span's latency equals its response's latency bit-for-bit
+    # (same clock reads), and the phases telescope onto it
+    lat_mismatch = decomp_err = 0.0
+    for r in responses:
+        s = by_key[(r.stream_id, r.seq)]
+        lat_mismatch = max(lat_mismatch, abs(s["latency_s"] - r.latency))
+        decomp_err = max(decomp_err,
+                         abs(sum(s["phases"].values()) - s["latency_s"]))
+    assert lat_mismatch == 0.0, \
+        f"span latency deviates from response latency by {lat_mismatch}"
+    assert decomp_err <= 1e-9, \
+        f"span phases do not telescope onto latency (err={decomp_err})"
+
+    ok = [s for s in spans if s["status"] == "ok"]
+
+    def _pct(key):
+        v = np.asarray([s["phases"][key] for s in ok]) * 1e3
+        return {"p50_ms": float(np.percentile(v, 50)),
+                "p99_ms": float(np.percentile(v, 99)),
+                "mean_ms": float(np.mean(v))}
+
+    stats = svc.stats
+    snap = tel.registry.snapshot()
+    shed = snap.get("repro_serving_shed_total", {})
+    return {
+        "spans": len(spans),
+        "queue_wait": _pct("queue_wait"),
+        "assemble": _pct("assemble"),
+        "execute": _pct("execute"),
+        "decomposition_max_abs_err_s": float(decomp_err),
+        "compile_cache_hit_rate":
+            1.0 - stats["compiles"] / max(stats["batches"], 1),
+        "shed": {"deadline": int(shed.get('reason="deadline"', 0)),
+                 "budget": int(shed.get('reason="budget"', 0))},
+    }
 
 
 def _des_sync(policy, svc_time, trace, n_streams: int) -> dict:
@@ -615,9 +697,28 @@ def run() -> dict:
         results["calibration_ms"] = {f"n{b},b{k}": sec * 1e3
                                      for (b, k), sec in sorted(table.items())}
         results["poisson"] = poisson
+        # the telemetry section: span decomposition from the pow2 async
+        # DES (virtual time -> exact), decision-log summary from the real
+        # drain race (real iteration counts)
+        results["telemetry"] = dict(
+            poisson["pow2"]["async"]["telemetry"],
+            decisions={"records": drain["decision_records"],
+                       "iters_match": drain["iters_match"],
+                       "verdicts": drain["verdicts"]})
+        t = results["telemetry"]
+        emit("serving_telemetry", 0.0,
+             f"queue_wait_p50_ms={t['queue_wait']['p50_ms']:.3f};"
+             f"execute_p50_ms={t['execute']['p50_ms']:.3f};"
+             f"compile_cache_hit_rate={t['compile_cache_hit_rate']:.3f};"
+             f"decomp_err={t['decomposition_max_abs_err_s']:.1e}")
 
     if "lm" in wanted:
         results["lm"] = _lm_section(n_streams, n_requests, util)
+    trace_path = os.environ.get("BENCH_SERVING_TRACE_OUT")
+    if trace_path:
+        from repro.telemetry import write_jsonl
+        n_rec = write_jsonl(trace_path, _TRACE_SINK)
+        emit("serving_trace_written", 0.0, f"{trace_path} ({n_rec} records)")
     out_path = os.environ.get(
         "BENCH_SERVING_OUT", os.path.join(_repo_root(), "BENCH_serving.json"))
     with open(out_path, "w") as f:

@@ -13,6 +13,12 @@ Gates BOTH workload arms of the serving benchmark:
       unbatched decode chain (int argmax predictions admit no
       tolerance) and the same 20% async-throughput floor.
 
+Also validates the artifact's "telemetry" section (DESIGN.md §6): the
+span phase decomposition must be present with the documented schema,
+telescope exactly (virtual-time DES -> zero error budget beyond 1e-9),
+and the decision log must have reproduced every response's iteration
+counts.
+
 The benchmark itself also asserts equivalence at run time; this check
 re-reads it from the artifact so a stale/corrupt artifact fails loudly.
 """
@@ -21,6 +27,48 @@ import sys
 
 EQUIV_TOL = 1e-4
 REGRESSION_FLOOR = 0.8     # new throughput must be >= 80% of baseline
+DECOMP_TOL = 1e-9          # span phases must telescope onto latency
+
+#: required shape of BENCH_serving.json["telemetry"]
+TELEMETRY_PHASES = ("queue_wait", "assemble", "execute")
+TELEMETRY_PCTS = ("p50_ms", "p99_ms", "mean_ms")
+
+
+def _check_telemetry(new: dict) -> dict:
+    t = new.get("telemetry")
+    if not isinstance(t, dict):
+        sys.exit("serving gate [telemetry]: artifact is missing the "
+                 "telemetry section")
+    for ph in TELEMETRY_PHASES:
+        sec = t.get(ph)
+        if not isinstance(sec, dict) or \
+                any(not isinstance(sec.get(k), (int, float))
+                    for k in TELEMETRY_PCTS):
+            sys.exit(f"serving gate [telemetry]: phase {ph!r} must carry "
+                     f"numeric {TELEMETRY_PCTS}")
+    if not isinstance(t.get("spans"), int) or t["spans"] <= 0:
+        sys.exit("serving gate [telemetry]: no spans were recorded")
+    err = t.get("decomposition_max_abs_err_s")
+    if not isinstance(err, (int, float)) or err > DECOMP_TOL:
+        sys.exit(f"serving gate [telemetry]: span phases do not telescope "
+                 f"onto end-to-end latency (err={err!r} > {DECOMP_TOL})")
+    hit = t.get("compile_cache_hit_rate")
+    if not isinstance(hit, (int, float)) or not 0.0 <= hit <= 1.0:
+        sys.exit(f"serving gate [telemetry]: compile_cache_hit_rate "
+                 f"{hit!r} is not a rate")
+    shed = t.get("shed")
+    if not isinstance(shed, dict) or \
+            sorted(shed) != ["budget", "deadline"]:
+        sys.exit(f"serving gate [telemetry]: shed breakdown must have "
+                 f"exactly budget/deadline reasons, got {shed!r}")
+    dec = t.get("decisions")
+    if not isinstance(dec, dict) or not dec.get("iters_match", False):
+        sys.exit("serving gate [telemetry]: decision log did not "
+                 "reproduce the responses' iteration counts "
+                 f"(decisions={dec!r})")
+    if not isinstance(dec.get("records"), int) or dec["records"] <= 0:
+        sys.exit("serving gate [telemetry]: decision log is empty")
+    return t
 
 
 def _floor_check(arm: str, key: str, new: dict, base: dict,
@@ -60,6 +108,8 @@ def main(baseline_path: str, artifact_path: str) -> None:
                  f"(mismatched_chunks={nl.get('mismatched_chunks')})")
     _floor_check("lm", "async_tok_per_s", nl, bl, "tok/s")
 
+    t = _check_telemetry(new)
+
     print("serving gate ok: "
           f"cmax async {nd['async_windows_per_s']:.2f} windows/s "
           f"(baseline {bd['async_windows_per_s']:.2f}, "
@@ -67,7 +117,10 @@ def main(baseline_path: str, artifact_path: str) -> None:
           f"max_abs_dev {nd['max_abs_dev']:.2e}); "
           f"lm async {nl['async_tok_per_s']:.1f} tok/s "
           f"(baseline {bl['async_tok_per_s']:.1f}, "
-          f"speedup {nl['speedup']:.3f}x, exact)")
+          f"speedup {nl['speedup']:.3f}x, exact); "
+          f"telemetry {t['spans']} spans, "
+          f"{t['decisions']['records']} decisions, "
+          f"decomp_err {t['decomposition_max_abs_err_s']:.1e}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""CI gate: telemetry must be (nearly) free.
+
+    PYTHONPATH=src python scripts/check_telemetry_overhead.py
+
+Two bounds (ISSUE 10 satellite):
+
+  1. FULL telemetry (spans + decision log) on the real async serving
+     drain race may cost at most MAX_OVERHEAD (5%) throughput vs the
+     disabled default — jitted device compute dominates a real drain, so
+     the per-request Python bookkeeping must disappear into it.
+  2. DISABLED mode (the default `Telemetry()`: registry only, Null
+     tracer/decision log) must be within noise of full telemetry's
+     *scheduler-only* cost: measured on the virtual-time DES (no device
+     work, pure scheduler), where any hot-path regression is maximally
+     visible. Reported informationally; the DES bound is generous
+     (MAX_DES_OVERHEAD) because the whole loop is microseconds per
+     request.
+
+Both comparisons use best-of-N timing (min rejects scheduler/GC noise)
+over the same warmed service pair.
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+MAX_OVERHEAD = 0.05        # full telemetry vs disabled, real drain race
+MAX_DES_OVERHEAD = 0.50    # full vs disabled on the pure-Python DES
+REPS = 5
+
+N_STREAMS, N_WINDOWS = 6, 3
+MIN_EVENTS, MAX_EVENTS = 1200, 4096
+MAX_BATCH = 4
+
+
+def _workload(cam):
+    from repro.data import events as ev_data
+    out = {}
+    for s in range(N_STREAMS):
+        spec = ev_data.SequenceSpec(
+            name=f"s{s}", n_windows=N_WINDOWS, events_per_window=MAX_EVENTS,
+            seed=900 + s, camera=cam, omega_scale=3.0, window_dt=0.02)
+        wins, _, _ = ev_data.make_sequence(spec)
+        lens = ev_data.ragged_lengths(N_WINDOWS, MIN_EVENTS, MAX_EVENTS,
+                                      seed=s)
+        out[f"s{s}"] = ev_data.ragged_from_sequence(wins, lens)
+    return out
+
+
+def _drain_rate(svc, workload, reps: int) -> float:
+    """Best-of-reps warm drain throughput (windows/s)."""
+    best = 0.0
+    for _ in range(reps):
+        svc._warm.clear()
+        n = 0
+        for sid, wins in workload.items():
+            for w in wins:
+                svc.submit(sid, w)
+                n += 1
+        t0 = time.perf_counter()
+        responses = svc.drain()
+        dt = time.perf_counter() - t0
+        assert len(responses) == n
+        best = max(best, n / dt)
+    return best
+
+
+def _real_race() -> float:
+    """Full-telemetry vs disabled overhead on the real drain race."""
+    from repro.core import CmaxConfig
+    from repro.data import events as ev_data
+    from repro.launch.serve import AsyncBatchedEstimationService
+    from repro.telemetry import Telemetry
+
+    cfg = CmaxConfig()
+    policy = ev_data.pow2_policy(min_bucket=1024)
+    workload = _workload(cfg.camera)
+    services = {
+        "off": AsyncBatchedEstimationService(cfg, policy=policy,
+                                             max_batch=MAX_BATCH),
+        "on": AsyncBatchedEstimationService(
+            cfg, policy=policy, max_batch=MAX_BATCH,
+            telemetry=Telemetry(spans=True, decisions=True)),
+    }
+    for svc in services.values():      # compile every shape class
+        _drain_rate(svc, workload, 1)
+    # interleave reps so machine-load drift hits both services equally
+    rate = {k: 0.0 for k in services}
+    for _ in range(REPS):
+        for k, svc in services.items():
+            rate[k] = max(rate[k], _drain_rate(svc, workload, 1))
+    overhead = 1.0 - rate["on"] / rate["off"]
+    print(f"telemetry overhead [real drain race]: off={rate['off']:.2f} "
+          f"on={rate['on']:.2f} windows/s -> {100 * overhead:+.2f}%")
+    return overhead
+
+
+def _des_race() -> float:
+    """Full-telemetry vs disabled on the virtual-time DES: pure scheduler,
+    no device work — the worst case for per-request bookkeeping."""
+    from benchmarks.serving import SimExecutor
+    from repro.core import CmaxConfig
+    from repro.data import events as ev_data
+    from repro.launch.serve import (AsyncBatchedEstimationService,
+                                    FakeClock)
+    from repro.telemetry import Telemetry
+    import types
+
+    policy = ev_data.pow2_policy(min_bucket=1024)
+    rng = np.random.default_rng(0)
+    n = 4000
+    lens = rng.integers(MIN_EVENTS, MAX_EVENTS + 1, n)
+    t_arr = np.cumsum(rng.exponential(2e-4, n))
+
+    def one(tel):
+        clock = FakeClock()
+        ex = SimExecutor(clock, lambda bucket, batch: 1e-3)
+        svc = AsyncBatchedEstimationService(
+            CmaxConfig(), policy=policy, max_batch=MAX_BATCH, clock=clock,
+            executor=ex, max_in_flight=2, telemetry=tel)
+        t0 = time.perf_counter()
+        i = 0
+        import math
+        while i < n or svc.in_flight() or svc.pending():
+            t_next = ex.next_completion()
+            if i < n and t_arr[i] <= t_next:
+                clock.advance_to(float(t_arr[i]))
+                svc.submit(f"s{i % 64}",
+                           types.SimpleNamespace(n=int(lens[i])),
+                           deadline=clock.now() + 0.05)
+                i += 1
+            elif t_next < math.inf:
+                clock.advance_to(t_next)
+            svc.poll()
+        return n / (time.perf_counter() - t0)
+
+    rate = {"off": 0.0, "on": 0.0}
+    for _ in range(3):
+        rate["off"] = max(rate["off"], one(Telemetry()))
+        rate["on"] = max(rate["on"],
+                         one(Telemetry(spans=True, decisions=True)))
+    overhead = 1.0 - rate["on"] / rate["off"]
+    print(f"telemetry overhead [virtual-time DES]: off={rate['off']:.0f} "
+          f"on={rate['on']:.0f} req/s -> {100 * overhead:+.2f}% "
+          f"(informational; bound {100 * MAX_DES_OVERHEAD:.0f}%)")
+    return overhead
+
+
+def main() -> None:
+    real = _real_race()
+    des = _des_race()
+    if real > MAX_OVERHEAD:
+        sys.exit(f"telemetry gate: enabling spans+decisions costs "
+                 f"{100 * real:.1f}% drain throughput "
+                 f"(> {100 * MAX_OVERHEAD:.0f}% budget)")
+    if des > MAX_DES_OVERHEAD:
+        sys.exit(f"telemetry gate: scheduler-only overhead "
+                 f"{100 * des:.1f}% exceeds the generous "
+                 f"{100 * MAX_DES_OVERHEAD:.0f}% DES bound — the hot "
+                 f"path grew real per-request work")
+    print("telemetry overhead gate ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,13 @@ BENCH_SERVING_OUT=artifacts/BENCH_serving.json \
 python scripts/check_serving_baseline.py \
     BENCH_serving.json artifacts/BENCH_serving.json
 
+# Telemetry-overhead gate: enabling spans + decision logging on the real
+# async drain race must cost <= 5% throughput (and the disabled-mode hot
+# path must not have grown per-request work — measured on the pure-Python
+# virtual-time DES, where bookkeeping cannot hide behind device compute).
+PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/check_telemetry_overhead.py
+
 # Kernel suite: Pallas kernels + the batched megakernel. Writes the
 # roofline/equivalence artifact, then gates megakernel-vs-reference
 # equivalence, zero spill, and the no-regression floor on the analytic

@@ -99,3 +99,31 @@ class BudgetedGainThresholdController:
         st, v, iters, _ = jax.lax.while_loop(
             cond, body, (state, v0, jnp.int32(0), jnp.bool_(False)))
         return st, v, iters
+
+
+def residence_verdict(iters: int, cap=None, max_iters=None) -> str:
+    """Classify one stage residence for the telemetry decision log.
+
+    Whichever bound the iteration count hit names what ended the stay:
+
+      "skip" — zero iterations (cap of 0, or an empty slot);
+      "cap"  — the budget scheduler's cap bound it (cap < max_iters hit);
+      "max"  — the static watchdog bound it (max_iters hit);
+      "run"  — neither bound hit: the Alg. 1 gain test stopped it.
+
+    Pure Python on already-harvested ints — never traced.
+    """
+    it = int(iters)
+    if it <= 0:
+        return "skip"
+    eff_cap = None
+    if cap is not None and max_iters is not None:
+        eff_cap = min(int(cap), int(max_iters))
+    elif cap is not None:
+        eff_cap = int(cap)
+    if eff_cap is not None and it >= eff_cap:
+        return "cap" if (max_iters is None or eff_cap < int(max_iters)) \
+            else "max"
+    if max_iters is not None and it >= int(max_iters):
+        return "max"
+    return "run"

@@ -31,6 +31,7 @@ from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import cgpr
 from .adaptive import should_stay
@@ -509,3 +510,22 @@ def estimate_streams(windows: EventWindow, omega_inits: jax.Array,
 
     return jax.vmap(one_stream)(windows.x, windows.y, windows.t, windows.p,
                                 windows.valid, omega_inits)
+
+
+def measured_stage_gains(result: WindowResult) -> np.ndarray:
+    """Measured whole-residence variance gain per stage, (B, S) float64:
+
+        (v_final - v_entry) / (|v_entry| + eps)        (Eq. 7 numerator
+                                                        over the entry
+                                                        variance scale)
+
+    Accepts both single-window results (scalar traces -> B = 1) and
+    batched results ((B,) traces). Telemetry-only: runs on harvested
+    host values, never inside a jit trace.
+    """
+    cols = []
+    for st in result.stages:
+        ve = np.atleast_1d(np.asarray(st.v_entry, np.float64))
+        vf = np.atleast_1d(np.asarray(st.v_final, np.float64))
+        cols.append((vf - ve) / (np.abs(ve) + 1e-12))
+    return np.stack(cols, axis=1) if cols else np.zeros((1, 0))

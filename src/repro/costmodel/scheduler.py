@@ -180,3 +180,33 @@ class BudgetScheduler:
             spent_ms += sp.cost_ms
             gained += sp.gain0 * sp.decay ** k
         return Allocation(iters, spent_uj, spent_ms, gained)
+
+    # -- affordability -----------------------------------------------------
+
+    def floor_cost(self, plan: WindowPlan) -> Tuple[float, float]:
+        """Modelled (energy_uj, latency_ms) of serving `plan` at the
+        unconditional floor — min_iters per stage, the cheapest execution
+        `allocate` can ever produce for the window."""
+        uj = ms = 0.0
+        for sp in plan.stages:
+            k = min(self.min_iters, sp.max_iters)
+            uj += k * sp.cost_uj
+            ms += k * sp.cost_ms
+        return uj, ms
+
+    def affordable(self, plan: WindowPlan, *,
+                   budget_uj: Optional[float] = None,
+                   budget_ms: Optional[float] = None) -> bool:
+        """Whether the per-window budget covers even the floor execution.
+
+        `allocate` grants the floor unconditionally (a zero budget still
+        estimates); this is the opt-in admission test for *strict* QoS
+        classes (`QosClass.strict`), which refuse windows whose floor
+        already exceeds the budget instead of overspending on them.
+        """
+        uj, ms = self.floor_cost(plan)
+        if budget_uj is not None and uj > budget_uj:
+            return False
+        if budget_ms is not None and ms > budget_ms:
+            return False
+        return True

@@ -78,9 +78,12 @@ import argparse
 import dataclasses
 import time
 from collections import deque
+from collections.abc import MutableMapping
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.telemetry import Telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -213,10 +216,18 @@ class QosClass:
     Within one dispatched batch, the budgets of same-class windows are
     pooled, so a hard window can borrow iterations a saturated easy window
     does not need (the scheduler spends where predicted gain/cost is
-    highest)."""
+    highest).
+
+    `strict` makes the budget an admission test as well as a cap: a
+    request whose modelled FLOOR cost (min_iters per stage) already
+    exceeds the budget is refused at submit (status="refused", counted
+    as a budget shed) instead of being served at the floor and
+    overspending. Non-strict budgeted classes — the default — always
+    serve at least the floor, exactly as before."""
     name: str
     budget_uj: Optional[float] = None   # per-window energy budget
     budget_ms: Optional[float] = None   # per-window modelled-latency budget
+    strict: bool = False                # refuse windows whose floor exceeds it
 
     @property
     def budgeted(self) -> bool:
@@ -246,7 +257,7 @@ class WindowResponse:
     iters: Tuple[int, ...]   # adaptive iterations per stage (() when shed)
     bucket_n: int            # event-length class the request ran in
     batch_b: int             # batch class the request ran in (0 when shed)
-    status: str = "ok"       # "ok" | "shed"
+    status: str = "ok"       # "ok" | "shed" (deadline) | "refused" (budget)
     t_submit: float = 0.0
     t_done: float = 0.0
     qos: str = "standard"    # QosClass the request was served under
@@ -263,6 +274,101 @@ class _InFlight:
     bucket_n: int
     batch_b: int
     t_dispatch: float
+    caps: Optional[np.ndarray] = None   # (B, S) budget caps, for telemetry
+
+
+# ---------------------------------------------------------------------------
+# Telemetry backing: metric families + the legacy `stats` compat view
+# ---------------------------------------------------------------------------
+
+
+class _ServingMetrics:
+    """The serving layer's metric families on one registry (DESIGN.md §6
+    naming: ``repro_serving_<what>_<unit>[_total]``). Both services
+    register the same families — registration is create-or-get, so two
+    services may share a registry — and the legacy `stats` dicts both
+    derive from these counters (the PR-6 dedup: one accounting scheme,
+    two views)."""
+
+    def __init__(self, registry):
+        self.registry = registry
+        c, g, h = registry.counter, registry.gauge, registry.histogram
+        self.windows = c("repro_serving_windows_total",
+                         "requests served to completion")
+        self.batches = c("repro_serving_batches_total", "batches dispatched")
+        self.compiles = c("repro_serving_compiles_total",
+                          "executable-cache misses (new shape classes)")
+        self.event_slots = c("repro_serving_event_slots_total",
+                             "padded slots dispatched (bucket_n * batch_b)")
+        self.raw_events = c("repro_serving_raw_events_total",
+                            "real payload slots dispatched")
+        self.fill_slots = c("repro_serving_fill_slots_total",
+                            "leader-replicated batch fill slots")
+        shed = c("repro_serving_shed_total",
+                 "requests dropped unserved, by reason",
+                 labels=("reason",))
+        self.shed_deadline = shed.labels(reason="deadline")
+        self.shed_budget = shed.labels(reason="budget")
+        self.budgeted_windows = c("repro_serving_budgeted_windows_total",
+                                  "windows served under a QoS budget")
+        self.budget_spent_uj = c("repro_serving_budget_spent_uj_total",
+                                 "modelled energy bought by the scheduler")
+        self.queue_wait = h("repro_serving_queue_wait_seconds",
+                            "submit -> batch admission wait")
+        self.execute = h("repro_serving_execute_seconds",
+                         "dispatch -> harvest time of the request's batch")
+        self.queue_depth = g("repro_serving_queue_depth",
+                             "requests queued, not yet dispatched")
+        self.inflight_batches = g("repro_serving_inflight_batches",
+                                  "batches dispatched, not yet harvested")
+
+
+#: legacy `stats` key -> _ServingMetrics attribute ("shed" is derived)
+_ASYNC_STAT_KEYS = ("windows", "batches", "compiles", "event_slots",
+                    "raw_events", "fill_slots", "shed", "budgeted_windows",
+                    "budget_spent_uj")
+_SYNC_STAT_KEYS = ("windows", "batches", "compiles", "event_slots",
+                   "raw_events", "fill_slots")
+
+
+class _StatsView(MutableMapping):
+    """The legacy `svc.stats` dict, as a live view over the registry.
+
+    Same keys, same values, same mutability (`stats["k"] += v` routes to
+    the backing counter) — except "shed", which is now the derived sum of
+    the deadline and budget shed counters and therefore read-only."""
+
+    def __init__(self, metrics: _ServingMetrics, keys: Tuple[str, ...]):
+        self._m = metrics
+        self._keys = keys
+
+    def __getitem__(self, k):
+        if k not in self._keys:
+            raise KeyError(k)
+        if k == "shed":
+            return (self._m.shed_deadline.value + self._m.shed_budget.value)
+        return getattr(self._m, k).value
+
+    def __setitem__(self, k, v):
+        if k == "shed":
+            raise TypeError("stats['shed'] is derived (deadline + budget "
+                            "sheds) — write the repro_serving_shed_total "
+                            "series instead")
+        if k not in self._keys:
+            raise KeyError(k)
+        getattr(self._m, k).set(v)
+
+    def __delitem__(self, k):
+        raise TypeError("stats keys are fixed")
+
+    def __iter__(self):
+        return iter(self._keys)
+
+    def __len__(self):
+        return len(self._keys)
+
+    def __repr__(self):
+        return repr(dict(self))
 
 
 def _batch_class(b: int, max_batch: int, mesh) -> int:
@@ -316,7 +422,8 @@ class AsyncBatchedEstimationService:
 
     def __init__(self, cfg=None, policy=None, max_batch: int = 8, mesh=None,
                  clock=None, executor=None, max_in_flight: int = 2,
-                 qos_classes=None, scheduler=None, workload=None):
+                 qos_classes=None, scheduler=None, workload=None,
+                 telemetry: Optional[Telemetry] = None):
         from repro.serving.workload import CmaxWorkload, Workload
         if workload is None and isinstance(cfg, Workload):
             cfg, workload = None, cfg
@@ -331,6 +438,15 @@ class AsyncBatchedEstimationService:
         self.clock = clock or MonotonicClock()
         self.executor = executor or AsyncDispatchExecutor()
         self.max_in_flight = int(max_in_flight)
+        # telemetry: the registry is always on (it backs `stats`); span
+        # tracing and decision logging are Null no-ops unless the caller's
+        # Telemetry enables them (DESIGN.md §6)
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry.bind_clock(self.clock)
+        self._m = _ServingMetrics(self.telemetry.registry)
+        self._tracer = self.telemetry.tracer
+        self._decisions = self.telemetry.decisions
+        self._stats = _StatsView(self._m, _ASYNC_STAT_KEYS)
         # QoS: "standard" always exists; extra classes carry energy/latency
         # budgets enforced via per-slot iteration caps (DESIGN.md §5).
         self.qos_classes: Dict[str, QosClass] = {
@@ -349,9 +465,12 @@ class AsyncBatchedEstimationService:
         self._ready: List[WindowResponse] = []
         self._order = 0
         self._cache: Dict[Tuple[int, int, bool], object] = {}
-        self.stats = {"windows": 0, "batches": 0, "compiles": 0,
-                      "event_slots": 0, "raw_events": 0, "fill_slots": 0,
-                      "shed": 0, "budgeted_windows": 0, "budget_spent_uj": 0.0}
+
+    @property
+    def stats(self):
+        """The legacy accounting dict, now a live view over the metrics
+        registry (`telemetry.registry`) — same keys, same values."""
+        return self._stats
 
     # -- request side --------------------------------------------------------
 
@@ -375,11 +494,27 @@ class AsyncBatchedEstimationService:
                              f"(have {sorted(self.qos_classes)})")
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
+        now = self.clock.now()
+        q = self.qos_classes[qos]
+        if q.strict and self.workload.unaffordable(
+                window, q, self._gain.get(stream_id)):
+            # strict class: even the floor execution exceeds the budget —
+            # refuse now rather than overspend. The stream's warm-start
+            # chain skips the window, exactly like a deadline shed.
+            self._m.shed_budget.inc()
+            self._tracer.start(stream_id, seq, qos, bucket_n, t=now)
+            self._tracer.finish(stream_id, seq, "shed", "refused", t=now)
+            out = self.workload.shed_output(self._warm.get(stream_id))
+            self._ready.append(WindowResponse(
+                stream_id, seq, out, (), bucket_n, 0, status="refused",
+                t_submit=now, t_done=now, qos=qos))
+            return seq
         hint = self.workload.coerce_hint(omega_hint)
+        self._tracer.start(stream_id, seq, qos, bucket_n, t=now)
         self._queue.append(WindowRequest(
             stream_id, seq, window, bucket_n, hint, int(priority),
             None if deadline is None else float(deadline),
-            self.clock.now(), self._order, qos))
+            now, self._order, qos))
         self._order += 1
         return seq
 
@@ -406,7 +541,7 @@ class AsyncBatchedEstimationService:
             fn = self.workload.executable(bucket_n, batch_b,
                                           budgeted=budgeted)
             self._cache[key] = fn
-            self.stats["compiles"] += 1
+            self._m.compiles.inc()
         return fn
 
     # -- QoS: budget -> per-slot iteration caps -------------------------------
@@ -433,7 +568,10 @@ class AsyncBatchedEstimationService:
         keep = []
         for r in self._queue:
             if r.deadline is not None and now > r.deadline:
-                self.stats["shed"] += 1
+                self._m.shed_deadline.inc()
+                self._m.queue_wait.observe(now - r.t_submit)
+                self._tracer.finish(r.stream_id, r.seq, "shed", "shed",
+                                    t=now)
                 out = self.workload.shed_output(self._warm.get(r.stream_id))
                 self._ready.append(WindowResponse(
                     r.stream_id, r.seq, out, (), r.bucket_n, 0,
@@ -469,8 +607,11 @@ class AsyncBatchedEstimationService:
 
         taken = {id(r) for r in batch}
         self._queue = [r for r in self._queue if id(r) not in taken]
+        t_admit = self.clock.now()
         for r in batch:
             self._busy.add(r.stream_id)
+            self._m.queue_wait.observe(t_admit - r.t_submit)
+            self._tracer.mark(r.stream_id, r.seq, "admit", t=t_admit)
 
         n_fill = batch_b - len(batch)
         caps = self._allocate_caps(batch, batch_b)
@@ -484,20 +625,26 @@ class AsyncBatchedEstimationService:
         else:
             ev_batch = om_batch = None    # virtual-time simulation
 
+        pre_compiles = self._m.compiles.value
         fn = self._executable(bucket_n, batch_b, budgeted=caps is not None)
+        compiled = self._m.compiles.value != pre_compiles
         if caps is not None:
             # the caps are per-dispatch data; the workload closes them over
             # so every executor sees the uniform fn(data, state) signature
             fn = self.workload.attach_caps(fn, caps)
         handle = self.executor.submit(fn, ev_batch, om_batch,
                                       bucket_n, batch_b)
+        t_dispatch = self.clock.now()
+        for r in batch:
+            self._tracer.mark(r.stream_id, r.seq, "dispatch", t=t_dispatch,
+                              batch_b=batch_b, compile=compiled)
         self._inflight.append(_InFlight(batch, handle, bucket_n, batch_b,
-                                        self.clock.now()))
-        self.stats["batches"] += 1
-        self.stats["event_slots"] += bucket_n * batch_b
-        self.stats["raw_events"] += sum(self.workload.size_of(r.window)
-                                        for r in batch)
-        self.stats["fill_slots"] += n_fill
+                                        t_dispatch, caps))
+        self._m.batches.inc()
+        self._m.event_slots.inc(bucket_n * batch_b)
+        self._m.raw_events.inc(sum(self.workload.size_of(r.window)
+                                   for r in batch))
+        self._m.fill_slots.inc(n_fill)
         return True
 
     # -- completion ------------------------------------------------------------
@@ -507,6 +654,8 @@ class AsyncBatchedEstimationService:
         now = self.clock.now()
         track_gain = any(q.budgeted for q in self.qos_classes.values())
         slot = self.workload.harvest(res, track_gain)
+        meta = self.workload.decision_meta(res) \
+            if self._decisions.enabled else None
         for i, r in enumerate(fb.requests):
             out, state, iters, gain = slot(i)
             if state is not None:    # None = data-free run; keep old state
@@ -516,11 +665,35 @@ class AsyncBatchedEstimationService:
                 # measured gain feeds the budget scheduler's model for
                 # this stream's NEXT window (measurement -> allocation)
                 self._gain[r.stream_id] = gain
+            self._m.execute.observe(now - fb.t_dispatch)
+            self._tracer.finish(r.stream_id, r.seq, "harvest", "ok",
+                                iters=iters, t=now)
+            if self._decisions.enabled:
+                self._record_decisions(r, iters, fb.caps, i, meta)
             self._ready.append(WindowResponse(
                 r.stream_id, r.seq, out, iters,
                 fb.bucket_n, fb.batch_b, status="ok",
                 t_submit=r.t_submit, t_done=now, qos=r.qos))
-        self.stats["windows"] += len(fb.requests)
+        self._m.windows.inc(len(fb.requests))
+
+    def _record_decisions(self, r: WindowRequest, iters: Tuple[int, ...],
+                          caps: Optional[np.ndarray], i: int,
+                          meta: Optional[dict]) -> None:
+        """One decision record per stage of one served window: iterations
+        spent vs the budget cap and static bound, the measured stage gain,
+        and the run/cap/max/skip verdict. The logged iters are the very
+        values the response carries — the log reproduces
+        `WindowResponse.iters` exactly (the acceptance criterion)."""
+        from repro.core.adaptive import residence_verdict
+        gains = meta["gains"] if meta is not None else None
+        max_iters = meta["max_iters"] if meta is not None else None
+        for s, it in enumerate(iters):
+            cap = int(caps[i, s]) if caps is not None else None
+            mi = int(max_iters[s]) if max_iters is not None else None
+            g = float(gains[i, s]) if gains is not None else None
+            self._decisions.record(
+                r.stream_id, r.seq, s, int(it), cap, mi, g,
+                residence_verdict(it, cap, mi))
 
     def _harvest(self, block: bool = False) -> bool:
         """Collect every finished in-flight batch (in any completion
@@ -551,6 +724,8 @@ class AsyncBatchedEstimationService:
         self._shed_expired()
         while len(self._inflight) < self.max_in_flight and self._launch_one():
             pass
+        self._m.queue_depth.set(len(self._queue))
+        self._m.inflight_batches.set(len(self._inflight))
         out, self._ready = self._ready, []
         return out
 
@@ -603,7 +778,8 @@ class BatchedEstimationService:
     """
 
     def __init__(self, cfg=None, policy=None, max_batch: int = 8, mesh=None,
-                 workload=None):
+                 workload=None, clock=None,
+                 telemetry: Optional[Telemetry] = None):
         from repro.serving.workload import CmaxWorkload, Workload
         if workload is None and isinstance(cfg, Workload):
             cfg, workload = None, cfg
@@ -614,12 +790,24 @@ class BatchedEstimationService:
         self.policy = workload.policy
         self.max_batch = int(max_batch)
         self.mesh = getattr(workload, "mesh", None)
+        # the sync drain has no scheduler clock; one is carried only so
+        # telemetry spans get timestamps (responses stay t=0, as before)
+        self.clock = clock or MonotonicClock()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry.bind_clock(self.clock)
+        self._m = _ServingMetrics(self.telemetry.registry)
+        self._tracer = self.telemetry.tracer
+        self._stats = _StatsView(self._m, _SYNC_STAT_KEYS)
         self._queue: Deque[WindowRequest] = deque()
         self._seq: Dict[str, int] = {}
         self._warm: Dict[str, object] = {}      # per-stream carried state
         self._cache: Dict[Tuple[int, int], object] = {}
-        self.stats = {"windows": 0, "batches": 0, "compiles": 0,
-                      "event_slots": 0, "raw_events": 0, "fill_slots": 0}
+
+    @property
+    def stats(self):
+        """The legacy accounting dict, now a live view over the metrics
+        registry (`telemetry.registry`) — same keys, same values."""
+        return self._stats
 
     # -- request side ------------------------------------------------------
 
@@ -635,6 +823,8 @@ class BatchedEstimationService:
         seq = self._seq.get(stream_id, 0)
         self._seq[stream_id] = seq + 1
         hint = self.workload.coerce_hint(omega_hint)
+        self._tracer.start(stream_id, seq, "standard", bucket_n,
+                           t=self.clock.now())
         self._queue.append(
             WindowRequest(stream_id, seq, window, bucket_n, hint))
         return seq
@@ -656,7 +846,7 @@ class BatchedEstimationService:
         if fn is None:
             fn = self.workload.executable(bucket_n, batch_b, donate=False)
             self._cache[key] = fn
-            self.stats["compiles"] += 1
+            self._m.compiles.inc()
         return fn
 
     def _batch_class(self, b: int) -> int:
@@ -701,6 +891,9 @@ class BatchedEstimationService:
             return []
         bucket_n = batch[0].bucket_n
         batch_b = self._batch_class(len(batch))
+        t_admit = self.clock.now()
+        for req in batch:
+            self._tracer.mark(req.stream_id, req.seq, "admit", t=t_admit)
 
         states = [req.omega_hint if req.omega_hint is not None
                   else self._warm.get(req.stream_id,
@@ -709,8 +902,17 @@ class BatchedEstimationService:
         # fill slots replicate the leader (finite data, results discarded)
         data, state_batch, n_fill = self.workload.make_batch(
             [req.window for req in batch], states, bucket_n, batch_b)
+        pre_compiles = self._m.compiles.value
         fn = self._executable(bucket_n, batch_b)
+        compiled = self._m.compiles.value != pre_compiles
+        t_dispatch = self.clock.now()
+        for req in batch:
+            self._tracer.mark(req.stream_id, req.seq, "dispatch",
+                              t=t_dispatch, batch_b=batch_b,
+                              compile=compiled)
         res = jax.block_until_ready(fn(data, state_batch))
+        t_done = self.clock.now()
+        self._m.execute.observe(t_done - t_dispatch)
 
         slot = self.workload.harvest(res, False)
         out = []
@@ -718,16 +920,18 @@ class BatchedEstimationService:
             out_i, state, iters, _ = slot(i)
             if state is not None:
                 self._warm[req.stream_id] = state
+            self._tracer.finish(req.stream_id, req.seq, "harvest", "ok",
+                                iters=iters, t=t_done)
             out.append(WindowResponse(
                 stream_id=req.stream_id, seq=req.seq, omega=out_i,
                 iters=iters, bucket_n=bucket_n, batch_b=batch_b))
 
-        self.stats["windows"] += len(batch)
-        self.stats["batches"] += 1
-        self.stats["event_slots"] += bucket_n * batch_b
-        self.stats["raw_events"] += sum(self.workload.size_of(req.window)
-                                        for req in batch)
-        self.stats["fill_slots"] += n_fill
+        self._m.windows.inc(len(batch))
+        self._m.batches.inc()
+        self._m.event_slots.inc(bucket_n * batch_b)
+        self._m.raw_events.inc(sum(self.workload.size_of(req.window)
+                                   for req in batch))
+        self._m.fill_slots.inc(n_fill)
         return out
 
     def drain(self) -> List[WindowResponse]:
@@ -750,6 +954,29 @@ class BatchedEstimationService:
 # ---------------------------------------------------------------------------
 
 
+def _cli_telemetry(args) -> Telemetry:
+    """Telemetry for a CLI run: spans + decisions when a trace sink is
+    requested; the registry is always on."""
+    want_trace = getattr(args, "trace_out", None) is not None
+    return Telemetry(spans=want_trace, decisions=want_trace)
+
+
+def _cli_export(svc, args) -> None:
+    """Write --metrics-out / --trace-out artifacts and print the human
+    summary when either was requested."""
+    tel = svc.telemetry
+    if getattr(args, "metrics_out", None):
+        tel.write_metrics(args.metrics_out)
+        print(f"wrote Prometheus metrics to {args.metrics_out}")
+    if getattr(args, "trace_out", None):
+        n = tel.write_trace(args.trace_out)
+        print(f"wrote {n} trace records (spans + decisions) "
+              f"to {args.trace_out}")
+    if getattr(args, "metrics_out", None) or \
+            getattr(args, "trace_out", None):
+        print(tel.summary(), end="")
+
+
 def _run_cmax(args) -> None:
     import dataclasses as _dc
 
@@ -765,20 +992,26 @@ def _run_cmax(args) -> None:
         policy = ev_data.single_policy(args.max_events)
 
     budgeted = args.budget_uj is not None or args.budget_ms is not None
+    if args.strict_budget and not budgeted:
+        raise SystemExit("--strict-budget needs --budget-uj/--budget-ms")
+    tel = _cli_telemetry(args)
     if args.sync:
         if budgeted:
             raise SystemExit("--budget-uj/--budget-ms need the async "
                              "service (drop --sync)")
         svc = BatchedEstimationService(cfg, policy=policy,
-                                       max_batch=args.max_batch)
+                                       max_batch=args.max_batch,
+                                       telemetry=tel)
     else:
         qos = []
         if budgeted:
             qos.append(QosClass("budgeted", budget_uj=args.budget_uj,
-                                budget_ms=args.budget_ms))
+                                budget_ms=args.budget_ms,
+                                strict=args.strict_budget))
         svc = AsyncBatchedEstimationService(cfg, policy=policy,
                                             max_batch=args.max_batch,
-                                            qos_classes=qos)
+                                            qos_classes=qos,
+                                            telemetry=tel)
 
     # synthetic ragged workload: S streams x K windows, log-uniform lengths
     truth = {}
@@ -823,6 +1056,7 @@ def _run_cmax(args) -> None:
                   f"modelled spend={per_w:.2f} uJ/window")
     print(f"rmse vs ground truth: "
           f"{float(np.sqrt(np.mean(np.square(errs)))):.4f} rad/s")
+    _cli_export(svc, args)
 
 
 def _run_lm(args) -> None:
@@ -833,12 +1067,15 @@ def _run_lm(args) -> None:
     cfg = get_smoke_config(args.arch)
     policy = lm_data.chunk_policy(min_bucket=args.min_bucket)
     wl = LMDecodeWorkload(cfg, policy=policy, max_len=args.max_len)
+    tel = _cli_telemetry(args)
     if args.sync:
         svc = BatchedEstimationService(workload=wl,
-                                       max_batch=args.max_batch)
+                                       max_batch=args.max_batch,
+                                       telemetry=tel)
     else:
         svc = AsyncBatchedEstimationService(workload=wl,
-                                            max_batch=args.max_batch)
+                                            max_batch=args.max_batch,
+                                            telemetry=tel)
 
     data_cfg = lm_data.LMDataConfig(vocab_size=cfg.vocab_size,
                                     seq_len=args.max_tokens,
@@ -866,6 +1103,7 @@ def _run_lm(args) -> None:
     preds = np.asarray(first.omega)
     print(f"greedy continuation ids ({first.stream_id} chunk 0, "
           f"first {min(16, preds.size)}):", preds[:16].tolist())
+    _cli_export(svc, args)
 
 
 def main(argv=None):
@@ -899,6 +1137,10 @@ def main(argv=None):
                          "budgeted QoS class")
     cm.add_argument("--budget-ms", type=float, default=None,
                     help="per-window modelled-latency budget (ms)")
+    cm.add_argument("--strict-budget", action="store_true",
+                    help="refuse (status=refused) windows whose modelled "
+                         "floor cost already exceeds the budget instead "
+                         "of serving them at the floor")
 
     lm = sub.add_parser("lm", help="LM decode served in variable-length "
                                    "token chunks through the bucketed "
@@ -917,6 +1159,15 @@ def main(argv=None):
     lm.add_argument("--max-batch", type=int, default=4)
     lm.add_argument("--sync", action="store_true",
                     help="use the synchronous FIFO-drain baseline")
+
+    for p in (cm, lm):
+        p.add_argument("--metrics-out", default=None, metavar="PATH",
+                       help="write Prometheus text-format metrics here "
+                            "after the drain")
+        p.add_argument("--trace-out", default=None, metavar="PATH",
+                       help="write the JSONL telemetry trace (request "
+                            "spans + adaptation decisions) here; also "
+                            "enables span/decision collection")
 
     args = ap.parse_args(argv)
     if args.mode == "cmax":

@@ -128,6 +128,27 @@ class Workload:
         executor sees the uniform fn(data, state) submit signature."""
         raise NotImplementedError
 
+    # -- telemetry -----------------------------------------------------------
+
+    def decision_meta(self, result) -> Optional[dict]:
+        """Per-stage decision-log metadata for one harvested batch result
+        (`repro.telemetry.DecisionLog`): a dict with
+
+            "gains"     — (B, S) measured whole-residence gain per stage
+            "max_iters" — (S,) static per-stage iteration bounds
+
+        or None when the workload has no per-stage objective (decision
+        records then carry gain=None / max_iters=None). Only called when
+        decision logging is enabled — must not burden the default path."""
+        return None
+
+    def unaffordable(self, payload, qos, gain0=None) -> bool:
+        """Strict-QoS admission test: True when even the floor execution
+        of `payload` is modelled to exceed the class's per-window budget
+        (such requests are refused at submit, not overspent on). The base
+        workload has no cost model and never refuses."""
+        return False
+
     # -- harvest -------------------------------------------------------------
 
     def harvest(self, result, track_gain: bool) -> Callable[[int], SlotResult]:
@@ -269,6 +290,28 @@ class CmaxWorkload(Workload):
         import jax.numpy as jnp
         caps_arr = jnp.asarray(caps)
         return (lambda _fn, _c: lambda w, o: _fn(w, o, _c))(fn, caps_arr)
+
+    # -- telemetry -----------------------------------------------------------
+
+    def decision_meta(self, result):
+        stages = getattr(result, "stages", ())
+        if not stages:
+            return None
+        from repro.core.pipeline import measured_stage_gains
+        cfg = self.cfg
+        max_iters = tuple(
+            int(st.max_iters) if cfg.adaptive else int(cfg.fixed_iters[si])
+            for si, st in enumerate(cfg.stages))
+        return {"gains": measured_stage_gains(result),
+                "max_iters": max_iters}
+
+    def unaffordable(self, payload, qos, gain0=None):
+        if not getattr(qos, "strict", False) or not qos.budgeted:
+            return False
+        sched = self._budget_scheduler()
+        plan = sched.plan_window(self.cfg, payload.n, gain0=gain0)
+        return not sched.affordable(plan, budget_uj=qos.budget_uj,
+                                    budget_ms=qos.budget_ms)
 
     # -- harvest -------------------------------------------------------------
 

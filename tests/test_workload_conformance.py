@@ -26,6 +26,7 @@ from repro.data import lm as lm_data
 from repro.launch.serve import (AsyncBatchedEstimationService, FakeClock,
                                 InlineExecutor, ManualExecutor, QosClass)
 from repro.serving import CmaxWorkload, LMDecodeWorkload
+from repro.telemetry import SPAN_FIELDS, Telemetry
 
 
 # ---------------------------------------------------------------------------
@@ -281,3 +282,39 @@ def test_executable_cache_hit_accounting(harness):
     assert svc.stats["compiles"] == first
     assert svc.stats["batches"] > batches0
     assert 0.0 <= svc.padded_slot_frac < 1.0
+
+
+# ---------------------------------------------------------------------------
+# contract 6: span schema — every workload emits the same telemetry shape
+# ---------------------------------------------------------------------------
+
+
+def test_span_schema_conformance(harness):
+    """Spans are a WORKLOAD-AGNOSTIC contract: both plugins, served with
+    tracing on, emit records with exactly the SPAN_FIELDS schema, the
+    canonical ok-path event order, and iteration tuples and bucket/batch
+    classes that mirror the responses bit-for-bit."""
+    streams = harness.streams(2, 2)
+    tel = Telemetry(spans=True)
+    svc = make_svc(harness, executor=InlineExecutor(), max_batch=2,
+                   telemetry=tel)
+    for sid, ps in streams.items():
+        for p in ps:
+            svc.submit(sid, p)
+    rs = svc.drain()
+    spans = tel.tracer.spans
+    assert len(spans) == len(rs) == 4
+    by = {(r.stream_id, r.seq): r for r in rs}
+    for s in spans:
+        d = s.to_dict()
+        assert tuple(d) == SPAN_FIELDS          # exact schema, exact order
+        assert [e for e, _ in s.events] == ["submit", "admit", "dispatch",
+                                            "harvest"]
+        r = by[(s.stream_id, s.seq)]
+        assert d["status"] == "ok" and d["qos"] == "standard"
+        assert d["iters"] == list(r.iters)
+        assert d["bucket_n"] == r.bucket_n and d["batch_b"] == r.batch_b
+        assert isinstance(d["compile"], bool)
+        assert d["latency_s"] == r.latency      # same clock reads
+        assert sum(d["phases"].values()) == pytest.approx(r.latency,
+                                                          abs=1e-12)
